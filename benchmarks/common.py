@@ -1,0 +1,73 @@
+"""Shared benchmark harness: run a scheduler set over a trace, emit CSV.
+
+``quick`` mode (default, used by ``python -m benchmarks.run``) simulates a
+few hours of trace; ``--full`` reproduces the paper's 10-day/230k-job runs.
+Every figure module builds on ``sweep``.
+"""
+from __future__ import annotations
+
+import copy
+import time
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import telemetry
+from repro.core.baselines import make_scheduler
+from repro.sim import Simulator, borg_trace, savings_vs, summarize
+from repro.sim.engine import SimConfig
+from repro.sim.trace import alibaba_trace, scale_capacity_for_utilization
+
+QUICK_DAYS = 0.15
+FULL_DAYS = 10.0
+
+
+def run_one(tele, jobs, capacity, scheduler_name: str, seed: int = 0,
+            sched_kwargs: Optional[Dict] = None) -> Dict:
+    sched = make_scheduler(scheduler_name, tele, **(sched_kwargs or {}))
+    t0 = time.perf_counter()
+    res = Simulator(tele, capacity).run(copy.deepcopy(jobs), sched)
+    s = summarize(res)
+    s["wall_s"] = time.perf_counter() - t0
+    s["scheduler"] = scheduler_name
+    s["_result"] = res
+    return s
+
+
+def sweep(schedulers: Sequence[str], *, days: float = QUICK_DAYS,
+          tolerance: float = 0.5, utilization: float = 0.15,
+          trace: str = "borg", ewif_table: str = "macknick",
+          seed: int = 0, sched_kwargs: Optional[Dict] = None,
+          rate_multiplier: float = 1.0,
+          regions: Optional[Sequence] = None) -> Dict[str, Dict]:
+    regions = regions or telemetry.REGIONS
+    tele = telemetry.generate(days=max(int(np.ceil(days)) + 1, 2), seed=seed,
+                              ewif_table=ewif_table, regions=regions)
+    make = borg_trace if trace == "borg" else alibaba_trace
+    jobs = make(days=days, seed=seed, tolerance=tolerance,
+                num_regions=len(regions), rate_multiplier=rate_multiplier)
+    cap = scale_capacity_for_utilization(jobs, days, len(regions),
+                                         utilization)
+    out = {}
+    for name in schedulers:
+        out[name] = run_one(tele, jobs, cap, name,
+                            sched_kwargs=sched_kwargs
+                            if name == "waterwise" else None)
+    if "baseline" in out:
+        for name, s in out.items():
+            s.update(savings_vs(out["baseline"], s))
+    return out
+
+
+def emit(rows: List[Dict], columns: Sequence[str], header: str = "") -> str:
+    lines = []
+    if header:
+        lines.append(f"# {header}")
+    lines.append(",".join(columns))
+    for r in rows:
+        lines.append(",".join(
+            f"{r.get(c):.4g}" if isinstance(r.get(c), float)
+            else str(r.get(c, "")) for c in columns))
+    text = "\n".join(lines)
+    print(text, flush=True)
+    return text

@@ -1,0 +1,172 @@
+"""One entry point per paper table/figure (invoked by benchmarks.run).
+
+Each ``figN(...)`` mirrors the corresponding artifact in the paper:
+
+  fig3   greedy-oracle benefit, delay-tolerance opportunity, distribution
+  fig5   WaterWise vs oracles across delay tolerances (Borg trace)
+  fig6   WRI water-intensity dataset sensitivity
+  fig7   WaterWise vs Ecovisor
+  fig8   λ_CO2 / λ_H2O weight sweep
+  fig9   Alibaba trace
+  fig10  Round-Robin / Least-Load comparison
+  fig11  utilization sweep (5% / 15% / 25%)
+  fig12  region-availability ablation
+  fig13  decision-making overhead (+ Table 3 communication overhead)
+  table2 service time & delay-tolerance violations
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import QUICK_DAYS, emit, sweep
+from repro.core import telemetry
+from repro.sim.metrics import region_distribution
+
+CORE = ["baseline", "waterwise", "carbon-greedy-opt", "water-greedy-opt"]
+SAVE_COLS = ["scheduler", "carbon_savings_pct", "water_savings_pct",
+             "mean_service_ratio", "violation_pct", "mean_solve_ms"]
+
+
+def fig3(days=QUICK_DAYS):
+    rows: List[Dict] = []
+    for tol in (0.1, 0.25, 1.0, 10.0):
+        out = sweep(["baseline", "carbon-greedy-opt", "water-greedy-opt"],
+                    days=days, tolerance=tol)
+        for name in ("carbon-greedy-opt", "water-greedy-opt"):
+            rows.append(dict(out[name], tolerance=tol))
+    # Fig 3(b): per-region distribution at 10% tolerance
+    out = sweep(["carbon-greedy-opt", "water-greedy-opt"], days=days,
+                tolerance=0.1)
+    dist = {n: region_distribution(out[n].pop("_result"), 5) for n in out}
+    for n, d in dist.items():
+        print(f"# fig3b {n} region%: " + ",".join(f"{x:.1f}" for x in d))
+    return emit(rows, ["scheduler", "tolerance", "carbon_savings_pct",
+                       "water_savings_pct"], "fig3: oracle benefit vs TOL")
+
+
+def fig5(days=QUICK_DAYS, ewif_table="macknick", tag="fig5"):
+    rows = []
+    for tol in (0.25, 0.5, 0.75, 1.0):
+        out = sweep(CORE, days=days, tolerance=tol, ewif_table=ewif_table)
+        for name in CORE[1:]:
+            rows.append(dict(out[name], tolerance=tol))
+    return emit(rows, ["scheduler", "tolerance"] + SAVE_COLS[1:],
+                f"{tag}: savings vs delay tolerance ({ewif_table})")
+
+
+def fig6(days=QUICK_DAYS):
+    return fig5(days=days, ewif_table="wri", tag="fig6")
+
+
+def fig7(days=QUICK_DAYS):
+    rows = []
+    for table in ("macknick", "wri"):
+        out = sweep(["baseline", "waterwise", "ecovisor"], days=days,
+                    tolerance=0.5, ewif_table=table)
+        for name in ("waterwise", "ecovisor"):
+            rows.append(dict(out[name], dataset=table))
+    return emit(rows, ["scheduler", "dataset", "carbon_savings_pct",
+                       "water_savings_pct"], "fig7: WaterWise vs Ecovisor")
+
+
+def fig8(days=QUICK_DAYS):
+    rows = []
+    for lam in (0.3, 0.5, 0.7):
+        out = sweep(["baseline", "waterwise"], days=days, tolerance=0.5,
+                    sched_kwargs=dict(lam_co2=lam, lam_h2o=1 - lam))
+        rows.append(dict(out["waterwise"], lam_co2=lam))
+    return emit(rows, ["scheduler", "lam_co2", "carbon_savings_pct",
+                       "water_savings_pct"], "fig8: weight sweep")
+
+
+def fig9(days=QUICK_DAYS):
+    rows = []
+    for tol in (0.25, 0.5):
+        out = sweep(CORE, days=min(days, 0.1), tolerance=tol, trace="alibaba")
+        for name in CORE[1:]:
+            rows.append(dict(out[name], tolerance=tol))
+    return emit(rows, ["scheduler", "tolerance", "carbon_savings_pct",
+                       "water_savings_pct", "mean_solve_ms"],
+                "fig9: Alibaba trace")
+
+
+def fig10(days=QUICK_DAYS):
+    out = sweep(["baseline", "waterwise", "round-robin", "least-load"],
+                days=days, tolerance=0.5)
+    rows = [out[n] for n in ("waterwise", "round-robin", "least-load")]
+    return emit(rows, SAVE_COLS, "fig10: load-balancer comparison")
+
+
+def fig11(days=QUICK_DAYS):
+    rows = []
+    for util in (0.05, 0.15, 0.25):
+        out = sweep(CORE, days=days, tolerance=0.5, utilization=util)
+        for name in CORE[1:]:
+            rows.append(dict(out[name], utilization=util))
+    return emit(rows, ["scheduler", "utilization", "carbon_savings_pct",
+                       "water_savings_pct", "violation_pct"],
+                "fig11: utilization sweep")
+
+
+def fig12(days=QUICK_DAYS):
+    rows = []
+    sets = {
+        "all-5": telemetry.REGIONS,
+        "no-mumbai": [r for r in telemetry.REGIONS if r.name != "Mumbai"],
+        "no-zurich": [r for r in telemetry.REGIONS if r.name != "Zurich"],
+        "zur-mil-mum": [r for r in telemetry.REGIONS
+                        if r.name in ("Zurich", "Milan", "Mumbai")],
+    }
+    for tag, regions in sets.items():
+        out = sweep(["baseline", "waterwise"], days=days, tolerance=0.5,
+                    regions=regions)
+        rows.append(dict(out["waterwise"], regions=tag))
+    return emit(rows, ["scheduler", "regions", "carbon_savings_pct",
+                       "water_savings_pct"], "fig12: region availability")
+
+
+def fig13(days=QUICK_DAYS):
+    rows = []
+    for trace, mult in (("borg", 1.0), ("borg", 2.0), ("alibaba", 1.0)):
+        out = sweep(["baseline", "waterwise"], days=min(days, 0.1),
+                    trace=trace, rate_multiplier=mult, tolerance=0.5)
+        s = out["waterwise"]
+        res = s.pop("_result")
+        st = res["solve_times"]
+        exec_mean = np.mean([r.job.exec_time_s for r in res["records"]])
+        rows.append(dict(trace=f"{trace}x{mult:g}",
+                         mean_solve_ms=float(st.mean() * 1e3),
+                         p99_solve_ms=float(np.percentile(st, 99) * 1e3),
+                         overhead_pct=float(st.mean() / exec_mean * 100),
+                         carbon_savings_pct=s["carbon_savings_pct"]))
+    emit(rows, ["trace", "mean_solve_ms", "p99_solve_ms", "overhead_pct"],
+         "fig13: decision overhead")
+    # Table 3: communication overhead, home = Oregon
+    t3 = []
+    ore = telemetry.REGION_INDEX["Oregon"]
+    for name, idx in telemetry.REGION_INDEX.items():
+        if name == "Oregon":
+            continue
+        lat = telemetry.transfer_latency_s(2e9, ore, idx)
+        t3.append(dict(region=name, transfer_s=lat,
+                       pct_of_10min_job=lat / 600.0 * 100))
+    return emit(t3, ["region", "transfer_s", "pct_of_10min_job"],
+                "table3: communication overhead (home=Oregon)")
+
+
+def table2(days=QUICK_DAYS):
+    rows = []
+    for tol in (0.25, 0.5, 0.75, 1.0):
+        out = sweep(CORE, days=days, tolerance=tol)
+        for name in CORE:
+            rows.append(dict(scheduler=name, tolerance=tol,
+                             service=out[name]["mean_service_ratio"],
+                             violation_pct=out[name]["violation_pct"]))
+    return emit(rows, ["scheduler", "tolerance", "service", "violation_pct"],
+                "table2: service time & violations")
+
+
+ALL = dict(fig3=fig3, fig5=fig5, fig6=fig6, fig7=fig7, fig8=fig8, fig9=fig9,
+           fig10=fig10, fig11=fig11, fig12=fig12, fig13=fig13, table2=table2)

@@ -1,0 +1,124 @@
+"""Render EXPERIMENTS.md from results/dryrun + a quick benchmark pass.
+
+    PYTHONPATH=src python -m benchmarks.make_experiments [--skip-sim]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import io
+import json
+import sys
+from contextlib import redirect_stdout
+
+from benchmarks import roofline
+
+HW_NOTE = ("TPU v5e per chip: 197 TF/s bf16, 819 GB/s HBM, ~50 GB/s/link "
+           "ICI. Terms: Tc = HLO_FLOPs/(peak), Tm = HLO_bytes/(BW), "
+           "Tx = collective_bytes/(link BW); per-device values from the "
+           "SPMD-partitioned module.")
+
+
+def _cell(arch, shape, variant, pod=1):
+    path = f"results/dryrun/{arch}.{shape}.pod{pod}.{variant}.json"
+    files = glob.glob(path)
+    return json.load(open(files[0])) if files else None
+
+
+def perf_row(arch, shape, variant):
+    c = _cell(arch, shape, variant)
+    if c is None or c.get("skipped"):
+        return None
+    r = c["roofline"]
+    bound = max(r["t_compute"], r["t_memory"], r["t_collective"])
+    return dict(variant=variant, tc=r["t_compute"], tm=r["t_memory"],
+                tx=r["t_collective"], dom=r["dominant"], bound=bound,
+                peak=c["memory"]["peak_bytes"] / 2**30,
+                coll=c["collectives"])
+
+
+def perf_table(arch, shape, variants):
+    rows = ["| variant | Tc (s) | Tm (s) | Tx (s) | bound (s) | dominant "
+            "| peak GiB |", "|---|---|---|---|---|---|---|"]
+    base = perf_row(arch, shape, "baseline")
+    for v in variants:
+        r = perf_row(arch, shape, v)
+        if r is None:
+            continue
+        dx = ""
+        if base and v != "baseline":
+            dx = f" ({r['bound'] / base['bound']:.2f}×)"
+        rows.append(f"| {v} | {r['tc']:.3e} | {r['tm']:.3e} | {r['tx']:.3e} "
+                    f"| {r['bound']:.3e}{dx} | {r['dom']} "
+                    f"| {r['peak']:.1f} |")
+    return "\n".join(rows)
+
+
+def decode_improvement_table():
+    rows = ["| arch | shape | Tm base (s) | Tm seqshard (s) | speedup "
+            "| peak base → opt (GiB) |", "|---|---|---|---|---|---|"]
+    from repro.configs import SHAPES, list_archs
+    for arch in list_archs():
+        for shape in ("decode_32k", "long_500k"):
+            b = perf_row(arch, shape, "baseline")
+            s = perf_row(arch, shape, "seqshard")
+            if not b or not s:
+                continue
+            rows.append(
+                f"| {arch} | {shape} | {b['tm']:.3e} | {s['tm']:.3e} "
+                f"| {b['bound'] / s['bound']:.1f}× "
+                f"| {b['peak']:.1f} → {s['peak']:.1f} |")
+    return "\n".join(rows)
+
+
+def sim_quick_summary():
+    from benchmarks.common import sweep
+    out = sweep(["baseline", "waterwise", "carbon-greedy-opt",
+                 "water-greedy-opt", "round-robin", "least-load",
+                 "ecovisor"], days=1.0, tolerance=0.5)
+    rows = ["| scheduler | carbon sav % | water sav % | service× | viol % "
+            "| solve ms |", "|---|---|---|---|---|---|"]
+    for name, s in out.items():
+        rows.append(f"| {name} | {s.get('carbon_savings_pct', 0):.1f} "
+                    f"| {s.get('water_savings_pct', 0):.1f} "
+                    f"| {s['mean_service_ratio']:.3f} "
+                    f"| {s['violation_pct']:.2f} "
+                    f"| {s['mean_solve_ms']:.2f} |")
+    return "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--skip-sim", action="store_true")
+    ap.add_argument("--out", default="EXPERIMENTS.md")
+    args = ap.parse_args()
+
+    sim_table = ("_(regenerate with --skip-sim off)_" if args.skip_sim
+                 else sim_quick_summary())
+    single = roofline.table(multi_pod=False)
+    multi = roofline.table(multi_pod=True)
+    summ = roofline.summary()
+
+    with open("EXPERIMENTS.template.md") as f:
+        template = f.read()
+    text = (template
+            .replace("{{SIM_TABLE}}", sim_table)
+            .replace("{{ROOFLINE_SINGLE}}", single)
+            .replace("{{ROOFLINE_MULTI}}", multi)
+            .replace("{{ROOFLINE_SUMMARY}}", str(summ))
+            .replace("{{HW_NOTE}}", HW_NOTE)
+            .replace("{{PERF_QWEN}}", perf_table(
+                "qwen2_72b", "train_4k",
+                ["baseline", "act2d", "seqpar", "remat_dots"]))
+            .replace("{{PERF_DBRX}}", perf_table(
+                "dbrx_132b", "prefill_32k", ["baseline", "act2d", "seqpar"]))
+            .replace("{{PERF_GEMMA}}", perf_table(
+                "gemma3_4b", "decode_32k", ["baseline", "seqshard"]))
+            .replace("{{PERF_DECODE_ALL}}", decode_improvement_table()))
+    with open(args.out, "w") as f:
+        f.write(text)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Run every paper benchmark (quick mode) + the roofline report.
+
+  PYTHONPATH=src python -m benchmarks.run            # quick (~minutes)
+  PYTHONPATH=src python -m benchmarks.run --full     # paper-scale traces
+  PYTHONPATH=src python -m benchmarks.run --only fig5,table2
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+
+    from benchmarks import figures
+    from benchmarks.common import FULL_DAYS, QUICK_DAYS
+    days = FULL_DAYS if args.full else QUICK_DAYS
+    only = set(args.only.split(",")) if args.only else None
+
+    t0 = time.time()
+    for name, fn in figures.ALL.items():
+        if only and name not in only:
+            continue
+        t1 = time.time()
+        fn(days=days)
+        print(f"# {name} done in {time.time() - t1:.1f}s\n", flush=True)
+
+    if not only or "roofline" in (only or set()):
+        try:
+            from benchmarks import roofline
+            print(roofline.table(multi_pod=False))
+            print()
+            print(roofline.summary())
+        except Exception as e:  # dry-run results may not exist yet
+            print(f"# roofline report unavailable: {e}")
+    print(f"# all benchmarks done in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""WaterWise scheduling *of training jobs* — the paper's scheduler driving
+the TPU-adaptation workload (DESIGN.md §2).
+
+Each job is a training run of one assigned architecture; its energy is
+derived from the dry-run roofline (dominant-term step time × chip power ×
+chips × steps) and its migration cost L[m,n] is its real sharded-checkpoint
+size over the WAN model. WaterWise then places/moves jobs across the five
+regions exactly as it does for PARSEC jobs.
+
+    PYTHONPATH=src python examples/geo_schedule_training.py
+"""
+import copy
+import glob
+import json
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import telemetry
+from repro.core.baselines import make_scheduler
+from repro.models import Model
+from repro.sim import Simulator, savings_vs, summarize
+from repro.core.problem import Job
+
+CHIP_W = 250.0          # v5e chip power draw under load
+CHIPS = 256
+STEPS = 2000            # steps per training job
+
+
+def job_from_dryrun(cell, job_id, home, submit_s):
+    """Energy/duration from the roofline terms; package = checkpoint bytes
+    (params + fp32 Adam moments)."""
+    r = cell["roofline"]
+    step_s = max(r["t_compute"], r["t_memory"], r["t_collective"])
+    exec_s = step_s * STEPS
+    energy_kwh = CHIP_W * CHIPS * exec_s / 3.6e6
+    ckpt_bytes = cell["params"] * (2 + 4 + 4)          # bf16 + fp32 mu/nu
+    return Job(job_id=job_id, home_region=home, submit_time_s=submit_s,
+               exec_time_s=exec_s, energy_kwh=energy_kwh,
+               package_bytes=ckpt_bytes, tolerance=0.5,
+               arch=cell["arch"])
+
+
+def main():
+    cells = []
+    for p in sorted(glob.glob("results/dryrun/*.train_4k.pod1.baseline.json")):
+        d = json.load(open(p))
+        if not d.get("skipped"):
+            cells.append(d)
+    if not cells:
+        print("run `python -m repro.launch.dryrun --all` first")
+        return
+
+    tele = telemetry.generate(days=4, seed=0)
+    rng = np.random.default_rng(0)
+    jobs = []
+    for i in range(60):                      # 60 training runs over 2 days
+        cell = cells[i % len(cells)]
+        jobs.append(job_from_dryrun(cell, i, int(rng.integers(0, 5)),
+                                    float(rng.uniform(0, 2 * 86400))))
+    cap = np.full(5, 6)                      # 6 pods per region
+
+    print(f"{len(jobs)} training jobs ({len(cells)} archs), "
+          f"mean duration {np.mean([j.exec_time_s for j in jobs])/3600:.2f} h,"
+          f" mean checkpoint "
+          f"{np.mean([j.package_bytes for j in jobs])/1e9:.0f} GB\n")
+
+    results = {}
+    for name in ("baseline", "waterwise"):
+        sched = make_scheduler(name, tele)
+        results[name] = summarize(Simulator(tele, cap).run(
+            copy.deepcopy(jobs), sched))
+    sv = savings_vs(results["baseline"], results["waterwise"])
+    b, w = results["baseline"], results["waterwise"]
+    print(f"baseline : {b['carbon_kg']:10.1f} kg CO2  {b['water_kl']:8.1f} kL")
+    print(f"waterwise: {w['carbon_kg']:10.1f} kg CO2  {w['water_kl']:8.1f} kL"
+          f"  (moved {w['moved_pct']:.0f}% of jobs)")
+    print(f"savings  : carbon {sv['carbon_savings_pct']:.1f}%  "
+          f"water {sv['water_savings_pct']:.1f}%  "
+          f"(service ×{w['mean_service_ratio']:.3f}, "
+          f"violations {w['violation_pct']:.2f}%)")
+
+
+if __name__ == "__main__":
+    main()

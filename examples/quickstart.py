@@ -1,0 +1,40 @@
+"""Quickstart: the WaterWise scheduler end-to-end in ~30 lines.
+
+Generates one day of per-region sustainability telemetry, replays two hours
+of a Borg-like trace through the carbon+water co-optimizing controller, and
+prints the savings against the carbon/water-unaware baseline.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import copy
+
+from repro.core import telemetry
+from repro.core.baselines import make_scheduler
+from repro.sim import Simulator, borg_trace, savings_vs, summarize
+from repro.sim.trace import scale_capacity_for_utilization
+
+DAYS = 0.1
+
+tele = telemetry.generate(days=2, seed=0)
+jobs = borg_trace(days=DAYS, seed=0, tolerance=0.5)
+capacity = scale_capacity_for_utilization(jobs, DAYS, 5, utilization=0.15)
+print(f"{len(jobs)} jobs over {DAYS * 24:.1f} h, "
+      f"{capacity.sum()} servers in {tele.num_regions} regions\n")
+
+results = {}
+for name in ("baseline", "waterwise", "carbon-greedy-opt",
+             "water-greedy-opt"):
+    sched = make_scheduler(name, tele)
+    results[name] = summarize(Simulator(tele, capacity).run(
+        copy.deepcopy(jobs), sched))
+
+base = results["baseline"]
+print(f"{'scheduler':20s} {'carbon kg':>10s} {'water kL':>9s} "
+      f"{'carbon sav':>10s} {'water sav':>9s} {'svc':>6s} {'viol%':>6s}")
+for name, s in results.items():
+    sv = savings_vs(base, s)
+    print(f"{name:20s} {s['carbon_kg']:10.1f} {s['water_kl']:9.2f} "
+          f"{sv['carbon_savings_pct']:9.1f}% {sv['water_savings_pct']:8.1f}% "
+          f"{s['mean_service_ratio']:6.3f} {s['violation_pct']:6.2f}")
+print("\nNote the tension: the carbon oracle *hurts* water and vice versa;"
+      "\nWaterWise lands near both oracles simultaneously (paper Fig 5).")

@@ -1,0 +1,74 @@
+"""End-to-end training driver: a ~100M-param qwen2-family model for a few
+hundred steps on the local devices, with checkpoint/restart fault tolerance
+(an injected failure at step 60 recovers transparently) and async
+checkpointing — the same runtime path a pod-scale job uses.
+
+    PYTHONPATH=src python examples/train_100m.py [--steps 200]
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.data import SyntheticTokens
+from repro.models import Model
+from repro.optim import adamw, cosine_schedule
+from repro.runtime import elastic
+from repro.runtime.train_loop import make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_100m")
+    ap.add_argument("--inject-failure", type=int, default=60)
+    args = ap.parse_args()
+
+    # ~100M params: a narrow 12-layer qwen2-family decoder.
+    cfg = get_config("qwen2_1_5b").replace(
+        n_layers=12, d_model=512, n_heads=8, n_kv=2, head_dim=64,
+        d_ff=2048, vocab=32000, remat="none", param_dtype="float32")
+    model = Model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    print(f"model: {model.param_count() / 1e6:.1f}M params")
+
+    opt = adamw(lr=cosine_schedule(3e-4, 20, args.steps))
+    opt_state = opt.init(params)
+    data = SyntheticTokens(vocab=cfg.vocab, seq_len=args.seq,
+                           global_batch=args.batch)
+    train_step = jax.jit(make_train_step(model, opt),
+                         donate_argnums=(0, 1))
+
+    losses = []
+
+    def step_fn(state, batch, step):
+        p, o = state
+        p, o, metrics = train_step(p, o, batch, jax.random.PRNGKey(step))
+        losses.append(float(metrics["loss"]))
+        if step % 20 == 0:
+            print(f"step {step:4d} loss {losses[-1]:.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f}", flush=True)
+        return (p, o)
+
+    injector = elastic.FailureInjector(
+        fail_after_steps=(args.inject_failure,)
+        if args.inject_failure else ())
+    t0 = time.time()
+    out = elastic.run_elastic(
+        (params, opt_state), step_fn, data.batch, num_steps=args.steps,
+        ckpt_dir=args.ckpt_dir, ckpt_every=25, injector=injector)
+    dt = time.time() - t0
+
+    first, last = np.mean(losses[:10]), np.mean(losses[-10:])
+    print(f"\n{out['steps_run']} steps in {dt:.1f}s "
+          f"({out['restarts']} restart(s) from injected failure)")
+    print(f"loss {first:.4f} -> {last:.4f} "
+          f"({'LEARNING' if last < first - 0.1 else 'check config'})")
+
+
+if __name__ == "__main__":
+    main()

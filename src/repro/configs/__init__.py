@@ -1,0 +1,3 @@
+"""Architecture configs: one module per assigned architecture + registry."""
+from repro.configs.base import (ModelConfig, ShapeSpec, SHAPES, get_config,
+                                list_archs, ARCH_REGISTRY)

@@ -1,0 +1,134 @@
+"""Scheduling-problem construction: jobs, cost matrices, arc filtering.
+
+Builds the inputs of the paper's MILP (Eqs 8-11) for a batch of M jobs over N
+regions at decision time T:
+
+  CO2[m, n]   Eq (1) carbon footprint of job m executed in region n *now*
+  H2O[m, n]   Eq (5) water footprint (incl. WSF scaling per Eqs 2-3)
+  L[m, n]     transfer latency from job m's home region to region n
+  allowed[m,n]  Eq (11) arc filter: L[m,n]/t_m + queue-wait <= TOL%·t_m
+
+Key structural observation (exploited by every solver backend): because each
+job is assigned to exactly ONE region (Eq 9), the delay-tolerance constraint
+Eq (11) — a sum over n of x[m,n]·L[m,n]/t[m,n] — degenerates to a per-arc
+bound. The MILP is therefore a capacitated transportation problem with
+forbidden arcs, whose constraint matrix is totally unimodular: the LP
+relaxation has integral vertices. The soft-constrained variant (Eqs 12-13)
+similarly folds the penalty sigma·P[m,n] into the arc cost, because the
+optimal P[m,n] is max(0, L/t - TOL) on the chosen arc and 0 elsewhere.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core import footprint, telemetry
+
+
+@dataclasses.dataclass
+class Job:
+    """One schedulable unit (paper: a PARSEC/CloudSuite batch job; ours: also
+    a JAX train/serve job of an assigned architecture)."""
+    job_id: int
+    home_region: int
+    submit_time_s: float
+    exec_time_s: float              # t_j: pure execution time (region-invariant)
+    energy_kwh: float               # E_j: mean estimate from previous executions
+    package_bytes: float = 2e9      # .tar / checkpoint size to move
+    tolerance: float = 0.25         # TOL%: allowed service-time slack fraction
+    servers: int = 1                # capacity units consumed
+    arch: Optional[str] = None      # workload-side tag (assigned architecture)
+    # Mutable bookkeeping (simulator-owned):
+    start_time_s: Optional[float] = None
+    finish_time_s: Optional[float] = None
+    region: Optional[int] = None
+    planned_start_s: Optional[float] = None  # oracle-intended delayed start
+    time_scale: float = 1.0                  # Ecovisor carbon-scaler effects
+    energy_scale: float = 1.0
+
+    @property
+    def deadline_s(self) -> float:
+        """Latest completion compatible with the delay tolerance: the job may
+        spend at most (1+TOL)·t_j in the system."""
+        return self.submit_time_s + (1.0 + self.tolerance) * self.exec_time_s
+
+
+@dataclasses.dataclass
+class ProblemInstance:
+    """Cost matrices + constraints for one solver invocation."""
+    co2: np.ndarray          # [M, N] gCO2
+    h2o: np.ndarray          # [M, N] effective liters
+    latency: np.ndarray      # [M, N] transfer latency seconds
+    overrun: np.ndarray      # [M, N] L/t - already-waited slack, as TOL fraction
+    allowed: np.ndarray      # [M, N] bool, Eq (11) arc filter
+    capacity: np.ndarray     # [N] free capacity units
+    jobs: Sequence[Job]
+    co2_max: np.ndarray      # [M] normalizers (paper Eq 7)
+    h2o_max: np.ndarray      # [M]
+
+    @property
+    def shape(self):
+        return self.co2.shape
+
+    def objective_matrix(self, lam_co2: float = 0.5, lam_h2o: float = 0.5,
+                         lam_ref: float = 0.1,
+                         co2_ref: Optional[np.ndarray] = None,
+                         h2o_ref: Optional[np.ndarray] = None) -> np.ndarray:
+        """Per-arc objective coefficients of Eq (8):
+        lam_co2·CO2/CO2_max + lam_h2o·H2O/H2O_max + lam_ref·history term."""
+        obj = (lam_co2 * self.co2 / self.co2_max[:, None]
+               + lam_h2o * self.h2o / self.h2o_max[:, None])
+        if co2_ref is not None and h2o_ref is not None:
+            obj = obj + lam_ref * (lam_co2 * co2_ref + lam_h2o * h2o_ref)[None, :]
+        return obj
+
+
+def build(jobs: Sequence[Job], tele: telemetry.Telemetry, now_s: float,
+          capacity: np.ndarray, server: footprint.ServerSpec,
+          bw_gbps: Optional[np.ndarray] = None) -> ProblemInstance:
+    """Construct the cost matrices for ``jobs`` at decision time ``now_s``.
+
+    The scheduler sees only *current* intensities (paper §4: "the scheduler
+    cannot have futuristic information") — footprints are priced at time
+    ``now_s`` even though execution extends beyond it.
+    """
+    snap = tele.at(now_s)
+    M, N = len(jobs), tele.num_regions
+
+    E = np.array([j.energy_kwh for j in jobs])          # [M]
+    t = np.array([j.exec_time_s for j in jobs])         # [M]
+    home = np.array([j.home_region for j in jobs])      # [M]
+    size = np.array([j.package_bytes for j in jobs])    # [M]
+    tol = np.array([j.tolerance for j in jobs])         # [M]
+    waited = np.maximum(now_s - np.array([j.submit_time_s for j in jobs]), 0.0)
+
+    co2 = footprint.job_carbon(E[:, None], t[:, None], snap["ci"][None, :],
+                               server)
+    h2o = footprint.job_water(E[:, None], t[:, None], snap["pue"][None, :],
+                              snap["ewif"][None, :], snap["wue"][None, :],
+                              snap["wsf"][None, :], server)
+
+    if bw_gbps is None:
+        bw_gbps = telemetry.WAN_BW_GBPS
+    lat = np.zeros((M, N))
+    for n in range(N):
+        not_home = home != n
+        bw = bw_gbps[home, n] * 1e9
+        rtt = telemetry.WAN_RTT_S[home, n]
+        lat[:, n] = np.where(not_home, 2.0 + rtt + size / np.maximum(bw, 1.0),
+                             0.0)
+
+    # Eq (11) with slack accounting: the fraction of tolerance already burnt
+    # by queue-waiting plus what the transfer would burn.
+    overrun = (lat + waited[:, None]) / np.maximum(t[:, None], 1e-9)
+    allowed = overrun <= tol[:, None] + 1e-12
+
+    # Normalizers (Eq 7): footprint in the worst (highest-intensity) region.
+    co2_max = np.maximum(co2.max(axis=1), 1e-9)
+    h2o_max = np.maximum(h2o.max(axis=1), 1e-9)
+
+    return ProblemInstance(co2=co2, h2o=h2o, latency=lat, overrun=overrun,
+                           allowed=allowed, capacity=np.asarray(capacity),
+                           jobs=jobs, co2_max=co2_max, h2o_max=h2o_max)

@@ -1,0 +1,51 @@
+"""Job slack management — paper §4 Eq (14).
+
+The MILP is stateless w.r.t. how long a job has already waited; the slack
+manager restores that state. When demand exceeds fleet capacity, jobs are
+ranked by urgency (ascending — least slack first) and only the top Σcap(n)
+enter the solver; the rest wait for the next round (Algorithm 1, lines 5-7).
+
+    Urgency_m = TOL%·t_m − L_m^avg − waited_m                       (Eq 14)
+
+where waited_m = T^current − T_m^start. (The paper prints the last term as
+(T_m^start − T^current) but describes it as "how long the job has been
+waiting" and ranks ascending-urgent; we implement the described semantics —
+waiting *consumes* slack.)
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+from repro.core import telemetry
+from repro.core.problem import Job
+
+
+def urgency(jobs: Sequence[Job], now_s: float,
+            bw_gbps: np.ndarray = None) -> np.ndarray:
+    """Eq (14) urgency score per job (seconds of remaining slack)."""
+    if bw_gbps is None:
+        bw_gbps = telemetry.WAN_BW_GBPS
+    N = bw_gbps.shape[0]
+    out = np.empty(len(jobs))
+    for i, j in enumerate(jobs):
+        lat = [telemetry.transfer_latency_s(j.package_bytes, j.home_region, n)
+               for n in range(N)]
+        l_avg = float(np.mean(lat))
+        waited = max(now_s - j.submit_time_s, 0.0)
+        out[i] = j.tolerance * j.exec_time_s - l_avg - waited
+    return out
+
+
+def pick_most_urgent(jobs: Sequence[Job], now_s: float, k: int,
+                     bw_gbps: np.ndarray = None):
+    """Split ``jobs`` into (top-k most urgent, deferred) per Eq 14 ranking."""
+    if len(jobs) <= k:
+        return list(jobs), []
+    u = urgency(jobs, now_s, bw_gbps)
+    order = np.argsort(u, kind="stable")      # ascending = most urgent first
+    take = set(order[:k].tolist())
+    chosen = [j for i, j in enumerate(jobs) if i in take]
+    deferred = [j for i, j in enumerate(jobs) if i not in take]
+    return chosen, deferred

@@ -1,0 +1,104 @@
+"""Solver backends for the WaterWise MILP (paper Eqs 8-13).
+
+Interchangeable backends behind one interface:
+
+  ``pulp``   paper-faithful PuLP + CBC branch-and-cut, literal Eq 8-13
+             formulation with explicit binary x[m,n] and penalty P[m,n].
+             Registered only when PuLP is importable (optional dependency);
+             this offline container ships without it, so the literal-MILP
+             cross-checks use ``scipy`` instead.
+  ``scipy``  HiGHS via scipy.optimize.milp, same formulation in sparse form.
+  ``flow``   our own exact solver: successive-shortest-path min-cost flow
+             with Johnson potentials, specialized to the capacitated
+             assignment structure. Exact because the constraint matrix is
+             totally unimodular (DESIGN.md §4) — no LP library needed.
+  ``jax``    jittable entropic-OT (log-space Sinkhorn) + vertex rounding —
+             the beyond-paper TPU-native solver (see kernels/sinkhorn for the
+             Pallas row/col-reduction kernel).
+
+All backends consume a cost matrix + arc filter + capacities and return a
+``SolveResult``. ``soften=True`` activates the paper's penalty method
+(Eqs 12-13): forbidden arcs become allowed at cost ``+ sigma * overrun_excess``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, Optional
+
+import numpy as np
+
+BIG = 1e6  # cost assigned to structurally-forbidden arcs in dense backends
+
+
+@dataclasses.dataclass
+class SolveResult:
+    assign: np.ndarray          # [M] region index, or -1 if unassigned
+    objective: float
+    status: str                 # "optimal" | "infeasible" | "rounded"
+    solve_time_s: float
+    penalties: np.ndarray       # [M] tolerance-overrun P value on chosen arc
+    backend: str
+
+    @property
+    def feasible(self) -> bool:
+        return self.status in ("optimal", "rounded") and (self.assign >= 0).all()
+
+
+def soft_cost(cost: np.ndarray, allowed: np.ndarray, overrun: np.ndarray,
+              tol: np.ndarray, sigma: float) -> np.ndarray:
+    """Fold the Eq 12-13 penalty into per-arc costs.
+
+    Because each job takes exactly one arc, the optimal penalty variable is
+    P[m,n] = max(0, overrun[m,n] - tol[m]) on the chosen arc — so the soft
+    MILP is exactly the hard transportation problem with modified costs.
+    """
+    excess = np.maximum(overrun - tol[:, None], 0.0)
+    del allowed  # every arc becomes allowed under the soft relaxation
+    return cost + sigma * excess
+
+
+def _timed(fn: Callable[[], SolveResult]) -> SolveResult:
+    t0 = time.perf_counter()
+    res = fn()
+    res.solve_time_s = time.perf_counter() - t0
+    return res
+
+
+_REGISTRY: Dict[str, Callable] = {}
+
+
+def register(name: str):
+    def deco(fn):
+        _REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def get_solver(name: str) -> Callable:
+    if name not in _REGISTRY:
+        # Import side-effect registration. PuLP is optional (absent in the
+        # offline container); its module import is a no-op when unavailable.
+        from repro.core.solvers import (  # noqa: F401
+            flow_solver, jax_solver, pulp_solver, scipy_solver)
+    if name not in _REGISTRY:
+        raise KeyError(f"solver backend {name!r} unavailable; "
+                       f"have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def available_backends() -> list:
+    get_solver("flow")  # trigger registration
+    return sorted(_REGISTRY)
+
+
+def solve(cost: np.ndarray, allowed: np.ndarray, capacity: np.ndarray,
+          *, backend: str = "scipy", soften: bool = False,
+          overrun: Optional[np.ndarray] = None,
+          tol: Optional[np.ndarray] = None, sigma: float = 10.0) -> SolveResult:
+    """Unified entry point. See module docstring."""
+    fn = get_solver(backend)
+    return fn(np.asarray(cost, dtype=np.float64), np.asarray(allowed, bool),
+              np.asarray(capacity), soften=soften,
+              overrun=None if overrun is None else np.asarray(overrun),
+              tol=None if tol is None else np.asarray(tol), sigma=sigma)

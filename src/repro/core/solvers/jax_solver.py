@@ -1,0 +1,209 @@
+"""JAX-native entropic-OT solver — the beyond-paper, TPU-idiomatic backend.
+
+The paper solves Eq 8-11 with CBC branch-and-cut on a CPU head node. On a TPU
+fleet the natural formulation is entropic-regularized optimal transport over
+the same transportation polytope:
+
+    min ⟨C, X⟩ − ε·H(X)   s.t.  X·1 = a,  Xᵀ·1 = b
+
+with forbidden arcs priced at +BIG. Capacity inequalities become equalities
+by appending one dummy supply row (supply = Σcap − M, zero cost) — the
+classic balanced-OT reduction. Log-domain Sinkhorn iterations with
+ε-annealing drive X toward a vertex of the polytope; as ε→0 the entropic
+optimum converges to the LP optimum, which is integral (total unimodularity).
+A final greedy confidence rounding + min-cost repair produces the integral
+assignment; the integrality gap vs the exact ``flow``/``scipy`` backends is
+measured in tests (typically 0 on non-degenerate instances).
+
+Why this exists: the Sinkhorn inner loop is two batched row/col logsumexp
+reductions — MXU/VPU-friendly, jittable, vmappable over scheduling windows,
+and served by the Pallas kernel in ``repro/kernels/sinkhorn`` on TPU. This is
+the TPU-native equivalent of the paper's branch-and-cut (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import solvers
+
+BIG = 1e4          # forbidden-arc cost after normalization to ~unit scale
+_NEG = -1e9        # log-domain mask value
+
+
+@functools.partial(jax.jit, static_argnames=("iters", "anneal_stages"))
+def sinkhorn_log(C: jnp.ndarray, log_a: jnp.ndarray, log_b: jnp.ndarray,
+                 eps0: float = 0.5, eps_min: float = 0.01,
+                 iters: int = 60, anneal_stages: int = 6):
+    """Log-stabilized Sinkhorn with geometric ε-annealing.
+
+    Args:
+      C: [M, N] cost (forbidden arcs already priced at BIG).
+      log_a: [M] log row marginals; log_b: [N] log col marginals.
+    Returns:
+      (f, g, eps): dual potentials and the final ε. The primal plan is
+      X = exp((f[:,None] + g[None,:] − C) / ε).
+    """
+    def col_update(f, eps):
+        # g_j = ε·(log b_j − logsumexp_i (f_i − C_ij)/ε)
+        return eps * (log_b - jax.nn.logsumexp(
+            (f[:, None] - C) / eps, axis=0))
+
+    def row_update(g, eps):
+        return eps * (log_a - jax.nn.logsumexp(
+            (g[None, :] - C) / eps, axis=1))
+
+    def stage(carry, eps):
+        f, g = carry
+
+        def body(_, fg):
+            f, g = fg
+            g = col_update(f, eps)
+            f = row_update(g, eps)
+            return (f, g)
+
+        f, g = jax.lax.fori_loop(0, iters, body, (f, g))
+        return (f, g), None
+
+    decay = (eps_min / eps0) ** (1.0 / max(anneal_stages - 1, 1))
+    eps_sched = eps0 * decay ** jnp.arange(anneal_stages)
+    f0 = jnp.zeros_like(log_a)
+    g0 = jnp.zeros_like(log_b)
+    (f, g), _ = jax.lax.scan(stage, (f0, g0), eps_sched)
+    return f, g, eps_sched[-1]
+
+
+@jax.jit
+def plan_from_duals(C, f, g, eps):
+    return jnp.exp((f[:, None] + g[None, :] - C) / eps)
+
+
+def _round_to_vertex(X: np.ndarray, cost: np.ndarray, mask: np.ndarray,
+                     capacity: np.ndarray) -> np.ndarray:
+    """Greedy confidence rounding + cheapest-feasible repair.
+
+    Jobs are committed in decreasing order of plan confidence (max row prob);
+    each takes its argmax column if capacity remains, else its cheapest
+    allowed column with spare capacity.
+    """
+    M, N = cost.shape
+    assign = np.full(M, -1, dtype=np.int64)
+    left = capacity.astype(np.int64).copy()
+    Xm = np.where(mask, X, -np.inf)
+    conf = Xm.max(axis=1)
+    for m in np.argsort(-conf):
+        if not mask[m].any():
+            continue
+        prefs = np.argsort(np.where(mask[m], cost[m] - 2.0 * BIG * Xm[m],
+                                    np.inf))
+        for n in prefs:
+            if mask[m, n] and left[n] > 0:
+                assign[m] = n
+                left[n] -= 1
+                break
+    return assign
+
+
+def _improve_2swap(assign: np.ndarray, cost: np.ndarray, mask: np.ndarray,
+                   capacity: np.ndarray, rounds: int = 3) -> np.ndarray:
+    """Local search: single-job moves + pairwise swaps until no improvement.
+
+    Polishes the rounded vertex; with the Sinkhorn duals already near-optimal
+    this usually closes the (small) remaining gap to the exact optimum.
+    """
+    M, N = cost.shape
+    used = np.bincount(assign[assign >= 0], minlength=N)
+    for _ in range(rounds):
+        improved = False
+        # Single moves into spare capacity.
+        for m in range(M):
+            if assign[m] < 0:
+                continue
+            cur = assign[m]
+            deltas = np.where(mask[m] & (used < capacity),
+                              cost[m] - cost[m, cur], np.inf)
+            deltas[cur] = np.inf
+            n = int(np.argmin(deltas))
+            if deltas[n] < -1e-12:
+                used[cur] -= 1
+                used[n] += 1
+                assign[m] = n
+                improved = True
+        # Pairwise swaps (vectorized over the job×job delta matrix).
+        a = assign
+        ok = a >= 0
+        cm = cost[np.arange(M), np.where(ok, a, 0)]
+        # delta of swapping m1<->m2: c[m1,a2]+c[m2,a1]-c[m1,a1]-c[m2,a2]
+        c_m1_a2 = np.where(mask[:, a] & ok[None, :], cost[:, a], np.inf)
+        delta = c_m1_a2 + c_m1_a2.T - cm[:, None] - cm[None, :]
+        delta[~ok] = np.inf
+        delta[:, ~ok] = np.inf
+        np.fill_diagonal(delta, np.inf)
+        m1, m2 = np.unravel_index(np.argmin(delta), delta.shape)
+        if delta[m1, m2] < -1e-12:
+            assign[m1], assign[m2] = assign[m2], assign[m1]
+            improved = True
+        if not improved:
+            break
+    return assign
+
+
+@solvers.register("jax")
+def solve(cost: np.ndarray, allowed: np.ndarray, capacity: np.ndarray, *,
+          soften: bool = False, overrun: Optional[np.ndarray] = None,
+          tol: Optional[np.ndarray] = None, sigma: float = 10.0,
+          eps_min: float = 0.005) -> solvers.SolveResult:
+    def run() -> solvers.SolveResult:
+        M, N = cost.shape
+        if soften:
+            assert overrun is not None and tol is not None
+            c_eff = solvers.soft_cost(cost, allowed, overrun, tol, sigma)
+            mask = np.ones_like(allowed, dtype=bool)
+        else:
+            c_eff = cost.astype(np.float64)
+            mask = allowed.astype(bool)
+
+        cap = capacity.astype(np.int64)
+        slack = int(cap.sum()) - M
+        if slack < 0 or not mask.any(axis=1).all():
+            return solvers.SolveResult(
+                assign=np.full(M, -1), objective=float("inf"),
+                status="infeasible", solve_time_s=0.0,
+                penalties=np.zeros(M), backend="jax")
+
+        # Normalize costs to ~unit scale so ε has a universal meaning.
+        scale = max(float(np.abs(c_eff[mask]).max()), 1e-9)
+        Cn = np.where(mask, c_eff / scale, BIG)
+        # Dummy row absorbs spare capacity (zero cost everywhere).
+        C = np.vstack([Cn, np.zeros((1, N))]).astype(np.float32)
+        a = np.concatenate([np.ones(M), [max(slack, 1e-9)]])
+        b = cap.astype(np.float64)
+        log_a = np.log(a / a.sum())
+        log_b = np.log(np.maximum(b, 1e-12) / a.sum())
+
+        f, g, eps = sinkhorn_log(jnp.asarray(C), jnp.asarray(log_a, jnp.float32),
+                                 jnp.asarray(log_b, jnp.float32),
+                                 eps_min=eps_min)
+        X = np.asarray(plan_from_duals(jnp.asarray(C), f, g, eps))[:M]
+        X = X / np.maximum(X.sum(axis=1, keepdims=True), 1e-30)
+
+        assign = _round_to_vertex(X, Cn, mask, cap)
+        if (assign >= 0).all():
+            assign = _improve_2swap(assign, Cn, mask, cap)
+        penalties = np.zeros(M)
+        if (assign < 0).any():
+            return solvers.SolveResult(assign=assign, objective=float("inf"),
+                                       status="infeasible", solve_time_s=0.0,
+                                       penalties=penalties, backend="jax")
+        obj = float(c_eff[np.arange(M), assign].sum())
+        if soften:
+            excess = np.maximum(overrun - tol[:, None], 0.0)
+            penalties = excess[np.arange(M), assign]
+        return solvers.SolveResult(assign=assign, objective=obj,
+                                   status="rounded", solve_time_s=0.0,
+                                   penalties=penalties, backend="jax")
+    return solvers._timed(run)

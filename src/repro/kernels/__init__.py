@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the compute hot-spots.
+
+Each kernel directory contains:
+  <name>.py   pl.pallas_call + explicit BlockSpec VMEM tiling
+  ops.py      jit'd public wrapper (interpret=True on CPU)
+  ref.py      pure-jnp oracle the kernel is asserted against
+
+Kernels: flash_attention (blocked online-softmax attention),
+ssd_scan (Mamba-2 chunked SSD), rglru_scan (RG-LRU blocked recurrence),
+sinkhorn (the WaterWise scheduler's entropic-OT inner loop).
+"""

@@ -1,0 +1,120 @@
+"""Pallas TPU flash attention: blocked online-softmax, causal / sliding.
+
+Grid = (BH, num_q_blocks, num_kv_blocks); the KV axis is the innermost
+(sequential) grid dimension, so the f32 accumulator / running-max / running-
+sum scratch persists across KV blocks for a fixed (head, q-block) — the
+classic TPU formulation. Per-step VMEM footprint:
+
+  q tile  (bq, D)    bf16      k/v tiles (bk, D) bf16
+  acc     (bq, D)    f32       m, l      (bq, 128) f32 (lane-padded)
+
+with bq = bk = 512, D = 128: ~0.9 MB — far under the ~128 MB v5e VMEM, and
+the (bq, bk) = (512, 512) MXU matmuls are 128-aligned in every dimension.
+
+GQA is expressed in the BlockSpec index maps: the K/V arrays carry kv heads
+only; q head ``h`` reads kv head ``h // group``, so grouped queries never
+materialize repeated KV in HBM (what ``jnp.repeat`` would do).
+
+Causal/sliding skipping is tile-level: blocks entirely above the diagonal
+(or beyond the window) are skipped via pl.when.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0e38
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale: float, causal: bool, window: int, bq: int, bk: int,
+            nk: int):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_first = iq * bq                       # first query position this tile
+    k_first = ik * bk
+    # Whole-tile liveness (any in-range (q, k) pair?).
+    live = jnp.bool_(True)
+    if causal:
+        live = jnp.logical_and(live, k_first <= q_first + bq - 1)
+    if window:
+        live = jnp.logical_and(live, q_first - (k_first + bk - 1) < window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale
+        k = k_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # [bq, bk]
+        qp = q_first + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kp = k_first + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        valid = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            valid &= kp <= qp
+        if window:
+            valid &= qp - kp < window
+        s = jnp.where(valid, s, NEG_INF)
+
+        m_prev = m_ref[:, 0]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_ref[:, 0] = l_ref[:, 0] * alpha + p.sum(axis=1)
+        m_ref[:, 0] = m_new
+        acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                        + jax.lax.dot_general(
+                            p, v_ref[0].astype(jnp.float32),
+                            (((1,), (0,)), ((), ()))))
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[:, 0], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "scale",
+                                             "bq", "bk", "group",
+                                             "interpret"))
+def flash_attention_bh(q, k, v, *, causal=True, window=0, scale=None,
+                       bq=512, bk=512, group=1, interpret=False):
+    """q: [BHq, Sq, D]; k, v: [BHkv, Skv, D] with BHq = BHkv · group.
+    Returns [BHq, Sq, D]. Head ``h`` attends kv head ``h // group``."""
+    BH, Sq, D = q.shape
+    Skv = k.shape[1]
+    bq = min(bq, Sq)
+    bk = min(bk, Skv)
+    assert Sq % bq == 0 and Skv % bk == 0, (Sq, bq, Skv, bk)
+    nq, nk = Sq // bq, Skv // bk
+    scale = float(scale if scale is not None else 1.0 / np.sqrt(D))
+
+    kernel = functools.partial(_kernel, scale=scale, causal=causal,
+                               window=int(window), bq=bq, bk=bk, nk=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda bh, iq, ik: (bh, iq, 0)),
+            pl.BlockSpec((1, bk, D), lambda bh, iq, ik: (bh // group, ik, 0)),
+            pl.BlockSpec((1, bk, D), lambda bh, iq, ik: (bh // group, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda bh, iq, ik: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, D), jnp.float32),     # acc
+            pltpu.VMEM((bq, 128), jnp.float32),   # running max (lane-padded)
+            pltpu.VMEM((bq, 128), jnp.float32),   # running sum
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,32 @@
+"""Public wrapper: model-layout in, kernel-layout dispatch, CPU fallback.
+
+``flash_attention`` takes the model's [B, S, Kh, G, D] / [B, S, Kh, D]
+layout (models/attention.py), flattens heads into the kernel's BH axis, and
+runs the Pallas kernel — interpret=True when no TPU is present, so the same
+code path is correct (if not fast) everywhere.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_bh
+
+
+def _on_tpu() -> bool:
+    return jax.devices()[0].platform == "tpu"
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, scale=None,
+                    bq=512, bk=512, interpret=None):
+    """q: [B, Sq, Kh, G, D]; k, v: [B, Skv, Kh, D] → [B, Sq, Kh, G, D]."""
+    B, Sq, Kh, G, D = q.shape
+    Skv = k.shape[1]
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    qf = q.transpose(0, 2, 3, 1, 4).reshape(B * Kh * G, Sq, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * Kh, Skv, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * Kh, Skv, D)
+    o = flash_attention_bh(qf, kf, vf, causal=causal, window=window,
+                           scale=scale, bq=bq, bk=bk, group=G,
+                           interpret=interpret)
+    return o.reshape(B, Kh, G, Sq, D).transpose(0, 3, 1, 2, 4)

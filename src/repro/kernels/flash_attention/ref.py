@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(q, k, v, *, causal=True, window=0, scale=None):
+    """q: [BH, Sq, D]; k, v: [BH, Skv, D] (kv heads already expanded).
+    fp32 reference softmax attention."""
+    BH, Sq, D = q.shape
+    Skv = k.shape[1]
+    scale = scale if scale is not None else 1.0 / np.sqrt(D)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qp = jnp.arange(Sq)[:, None]
+    kp = jnp.arange(Skv)[None, :]
+    valid = jnp.ones((Sq, Skv), bool)
+    if causal:
+        valid &= kp <= qp
+    if window:
+        valid &= qp - kp < window
+    s = jnp.where(valid[None], s, -2e38)
+    p = jnp.exp(s - s.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,15 @@
+"""Public wrapper for the RG-LRU scan kernel (interpret fallback on CPU)."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.rglru_scan.rglru_scan import rglru_scan_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.devices()[0].platform == "tpu"
+
+
+def rglru_scan(a, bx, *, chunk=128, interpret=None):
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    return rglru_scan_pallas(a, bx, chunk=chunk, interpret=interpret)

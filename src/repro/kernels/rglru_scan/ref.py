@@ -1,0 +1,13 @@
+"""Oracle: naive sequential RG-LRU recurrence over precomputed gates."""
+import jax.numpy as jnp
+
+
+def rglru_ref(a, bx):
+    """a, bx: [B, S, W] (decay / gated input). h_t = a_t·h_{t−1} + bx_t."""
+    B, S, W = a.shape
+    h = jnp.zeros((B, W), jnp.float32)
+    ys = []
+    for t in range(S):
+        h = a[:, t].astype(jnp.float32) * h + bx[:, t].astype(jnp.float32)
+        ys.append(h)
+    return jnp.stack(ys, axis=1).astype(a.dtype)

@@ -1,0 +1,58 @@
+"""Pallas TPU kernel: RG-LRU blocked linear recurrence.
+
+Grid = (B, num_chunks) with chunks sequential; the [1, W] hidden state
+persists in VMEM scratch. Within a chunk the recurrence is evaluated by the
+blocked two-pass form: for lane-width W the chunk does L sequential
+vector FMAs (VPU), while the chunk-to-chunk handoff stays in VMEM — HBM
+traffic is exactly one read of (a, bx) and one write of y.
+
+The gate matmuls (W×W) stay outside (XLA already MXU-pipelines them);
+this kernel owns the part XLA serializes badly: the length-S dependence.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_ref, b_ref, y_ref, h_ref, *, L: int):
+    ic = pl.program_id(1)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    a = a_ref[0].astype(jnp.float32)          # [L, W]
+    bx = b_ref[0].astype(jnp.float32)
+
+    def step(t, h):
+        h = a[t][None, :] * h + bx[t][None, :]
+        y_ref[0, t, :] = h[0].astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, L, step, h_ref[...])
+    h_ref[...] = h
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rglru_scan_pallas(a, bx, *, chunk: int = 128, interpret: bool = False):
+    """a, bx: [B, S, W] → y [B, S, W] with y_t = a_t·y_{t−1} + bx_t."""
+    B, S, W = a.shape
+    L = min(chunk, S)
+    assert S % L == 0
+    nc = S // L
+    kernel = functools.partial(_kernel, L=L)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, nc),
+        in_specs=[pl.BlockSpec((1, L, W), lambda ib, ic: (ib, ic, 0)),
+                  pl.BlockSpec((1, L, W), lambda ib, ic: (ib, ic, 0))],
+        out_specs=pl.BlockSpec((1, L, W), lambda ib, ic: (ib, ic, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, S, W), a.dtype),
+        scratch_shapes=[pltpu.VMEM((1, W), jnp.float32)],
+        interpret=interpret,
+    )(a, bx)

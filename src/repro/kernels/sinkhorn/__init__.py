@@ -1,0 +1,1 @@
+from repro.kernels.sinkhorn.ops import sinkhorn_iteration

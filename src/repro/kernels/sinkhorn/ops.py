@@ -1,0 +1,25 @@
+"""Public wrapper for the fused Sinkhorn-iteration kernel."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.sinkhorn.sinkhorn import sinkhorn_iteration_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.devices()[0].platform == "tpu"
+
+
+def sinkhorn_iteration(C, f, g, log_a, log_b, eps, *, bm=256,
+                       interpret=None):
+    """One fused (f, g) Sinkhorn update. Drop-in for the jnp reference
+    (the ``f`` argument is unused — the fused pass recomputes it from g —
+    but kept for signature parity with ref.py)."""
+    del f
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    M = C.shape[0]
+    bm = min(bm, M)
+    while M % bm:
+        bm //= 2
+    return sinkhorn_iteration_pallas(C, g, log_a, log_b, eps=float(eps),
+                                     bm=max(bm, 1), interpret=interpret)

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for one fused Sinkhorn iteration (log-domain)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sinkhorn_iteration_ref(C, f, g, log_a, log_b, eps):
+    """One (f, g) update pair. C: [M, N]; f/log_a: [M]; g/log_b: [N]."""
+    f_new = eps * (log_a - jax.nn.logsumexp((g[None, :] - C) / eps, axis=1))
+    g_new = eps * (log_b - jax.nn.logsumexp((f_new[:, None] - C) / eps,
+                                            axis=0))
+    return f_new, g_new

@@ -1,0 +1,16 @@
+"""Public wrapper for the SSD scan kernel (interpret fallback on CPU)."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.ssd_scan.ssd_scan import ssd_scan_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.devices()[0].platform == "tpu"
+
+
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk=256, interpret=None):
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    return ssd_scan_pallas(x, dt, A, Bm, Cm, chunk=chunk,
+                           interpret=interpret)

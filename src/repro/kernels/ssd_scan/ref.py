@@ -1,0 +1,22 @@
+"""Oracle: the models/ssm.py chunked SSD (itself validated against a naive
+sequential recurrence in tests/test_kernels.py)."""
+from repro.models.ssm import ssd_chunked as ssd_ref
+
+
+def ssd_naive(x, dt, A, Bm, Cm):
+    """O(S·N·P) sequential recurrence — ground truth for tiny shapes."""
+    import jax.numpy as jnp
+    b, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    Bf = jnp.repeat(Bm.astype(jnp.float32), rep, axis=2)
+    Cf = jnp.repeat(Cm.astype(jnp.float32), rep, axis=2)
+    a = jnp.exp(dt.astype(jnp.float32) * A.astype(jnp.float32))    # [b,S,H]
+    xdt = x.astype(jnp.float32) * dt.astype(jnp.float32)[..., None]
+    state = jnp.zeros((b, H, P, N), jnp.float32)
+    ys = []
+    for t in range(S):
+        state = (state * a[:, t, :, None, None]
+                 + jnp.einsum("bhn,bhp->bhpn", Bf[:, t], xdt[:, t]))
+        ys.append(jnp.einsum("bhn,bhpn->bhp", Cf[:, t], state))
+    return jnp.stack(ys, axis=1).astype(x.dtype), state.astype(x.dtype)

@@ -1,0 +1,342 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST precede every other import (jax locks the device
+# count at first init). Do not import this module from code that needs the
+# real single-device view.
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this produces, without allocating a single model buffer:
+
+  * proof the distribution config is coherent (compile succeeds),
+  * per-device memory from ``compiled.memory_analysis()``,
+  * HLO FLOPs / bytes from ``compiled.cost_analysis()``,
+  * per-collective byte totals parsed from the partitioned HLO text,
+  * the three roofline terms (compute / memory / collective) for v5e.
+
+Results cache to JSON (one file per cell) under --out; EXPERIMENTS.md's
+tables are generated from these.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2_72b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--variant baseline]
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import SHAPES, get_config, list_archs
+from repro.launch.mesh import make_production_mesh
+from repro.models import Model
+from repro.models.common import split_tree
+from repro.optim import adamw
+from repro.runtime import sharding
+from repro.runtime.train_loop import (make_decode_step, make_prefill_step,
+                                      make_train_step)
+
+# TPU v5e hardware constants (per chip).
+HW = dict(peak_flops=197e12, hbm_bw=819e9, ici_bw=50e9)
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "c64": 8, "c128": 16}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\w+\[[\d,]*\]))\S*\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(txt: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(txt):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_DUS_RE = re.compile(r"=\s*(\w+)\[([\d,]+)\]\S*\s+dynamic-update-slice\(")
+
+
+def f32_widened_stack_bytes(hlo_text: str) -> int:
+    """CPU-backend artifact: XLA CPU hoists bf16→f32 converts of remat
+    residual stacks out of the backward loop, materializing an f32 copy of
+    a stack that is bf16 at the jaxpr level (verified in
+    tests/test_dryrun.py). A TPU compile keeps the bf16 stack and converts
+    per-slice in VMEM. We report the f32 copies' bytes so the roofline
+    table can show both raw and TPU-adjusted peak memory."""
+    f32_stacks, bf16_stacks = {}, set()
+    for m in _DUS_RE.finditer(hlo_text):
+        dt, dims = m.group(1), m.group(2)
+        if dt == "bf16":
+            bf16_stacks.add(dims)
+        elif dt == "f32":
+            n = 1
+            for d in dims.split(","):
+                n *= int(d)
+            f32_stacks[dims] = max(f32_stacks.get(dims, 0), 4 * n)
+    return int(sum(b for dims, b in f32_stacks.items()
+                   if dims in bf16_stacks or b > 2**28))
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-collective-type bytes from partitioned HLO (per-device shapes).
+
+    Model (ring algorithms): all-reduce moves 2× its result bytes per
+    device; the others move ≈ their result bytes. ``-done`` ops are skipped
+    (counted at ``-start``)."""
+    out = {k: 0.0 for k in ("all-reduce", "all-gather", "reduce-scatter",
+                            "all-to-all", "collective-permute")}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m or "-done" in line.split("=")[1][:40]:
+            continue
+        result_txt = m.group(1) or m.group(2)
+        b = _shape_bytes(result_txt)
+        kind = m.group(3)
+        out[kind] += 2.0 * b if kind == "all-reduce" else float(b)
+    out["total"] = sum(out.values())
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Cell construction
+# ---------------------------------------------------------------------------
+
+def _grad_accum_for(cfg, shape, data_ways: int = 16) -> int:
+    """Microbatching so per-device live activations stay v5e-sized.
+
+    Activations shard over the data(+pod) axes only — every model-shard
+    device holds the full per-data-shard batch — so the relevant quantity is
+    tokens per *data shard*, not per chip. Target ≤ 4k tokens/microbatch
+    (one 4k sequence), which keeps saved-residual memory at
+    n_layers × 4096 × d_model × 2B (e.g. 5.4 GB for qwen2-72b)."""
+    per_shard_seqs = max(shape.global_batch // data_ways, 1)
+    tokens_budget = 4096
+    seqs_per_micro = max(tokens_budget // shape.seq_len, 1)
+    return max(1, per_shard_seqs // seqs_per_micro)
+
+
+VARIANTS: Dict[str, Dict] = {
+    "baseline": {},
+    # §Perf hillclimb variants (EXPERIMENTS.md records the full log):
+    # 2-D activation sharding: embed dim of activations over "model" —
+    # residual/logits traffic shards 16×, MoE combine becomes reduce-scatter.
+    "act2d": {"rules": {"act_embed": ("model",)}},
+    # 2-D cache sharding: decode caches shard over model as well as data —
+    # batched decode reads 1/16th of the cache per device.
+    "seqshard": {"rules": {"cache_seq": ("data", "model")}},
+    "act2d_seqshard": {"rules": {"act_embed": ("model",),
+                                 "cache_seq": ("data", "model")}},
+    # remat=dots: keep matmul outputs, recompute elementwise only.
+    "remat_dots": {"cfg_remat": "dots"},
+    # Sequence parallelism: token axis sharded over model too (GQA KV is
+    # the only cross-token tensor — far cheaper to gather than the full
+    # residual stream).
+    "seqpar": {"rules": {"act_seq": ("data", "model")}},
+    "seqpar_seqshard": {"rules": {"act_seq": ("data", "model"),
+                                  "cache_seq": ("data", "model")}},
+    # int8 cross-pod gradient compression (train cells).
+    "int8_grads": {"compress": "int8"},
+}
+
+
+def build_cell(arch: str, shape_name: str, multi_pod: bool,
+               variant: str = "baseline", overrides: Optional[Dict] = None):
+    """(step_fn, abstract_args, donate, mesh, meta) for one cell."""
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch)
+    ov = dict(VARIANTS.get(variant, {}))
+    ov.update(overrides or {})
+    cfg_over = {k[4:]: v for k, v in ov.items() if k.startswith("cfg_")}
+    if cfg_over:
+        cfg = cfg.replace(**cfg_over)
+    rules = dict(sharding.DEFAULT_RULES)
+    rules.update(ov.get("rules", {}))
+
+    if shape_name == "long_500k" and not cfg.sub_quadratic:
+        raise SkipCell(f"{arch} is pure full-attention; long_500k skipped "
+                       f"per assignment (see DESIGN.md §Arch-applicability)")
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = Model(cfg)
+    pshapes, pspecs = model.abstract_params()
+    params = sharding.abstract_with_sharding(pshapes, pspecs, mesh, rules)
+
+    inputs = jax.eval_shape(lambda: model.make_inputs(shape))
+    in_shapes, in_specs = split_tree(inputs)
+    batch = sharding.abstract_with_sharding(in_shapes, in_specs, mesh, rules)
+
+    meta = dict(arch=arch, shape=shape_name, kind=shape.kind,
+                multi_pod=multi_pod, variant=variant,
+                params=model.param_count(),
+                mesh=str(dict(mesh.shape)))
+
+    if shape.kind == "train":
+        ga = int(ov.get("grad_accum", _grad_accum_for(cfg, shape)))
+        meta["grad_accum"] = ga
+        opt = adamw()
+        ostate_shapes = jax.eval_shape(opt.init, pshapes)
+        # mu/nu mirror the param sharding (FSDP'd optimizer state); the step
+        # counter is replicated.
+        from jax.sharding import NamedSharding, PartitionSpec
+        rep = NamedSharding(mesh, PartitionSpec())
+        mu = sharding.abstract_with_sharding(ostate_shapes.mu, pspecs, mesh,
+                                             rules)
+        nu = sharding.abstract_with_sharding(ostate_shapes.nu, pspecs, mesh,
+                                             rules)
+        ostate = type(ostate_shapes)(step=jax.ShapeDtypeStruct(
+            (), jnp.int32, sharding=rep), mu=mu, nu=nu)
+        step_fn = make_train_step(model, opt, grad_accum=ga,
+                                  compress=ov.get("compress"))
+        key = jax.ShapeDtypeStruct((2,), jnp.uint32, sharding=rep)
+        args = (params, ostate, batch, key)
+        donate = (0, 1)
+    elif shape.kind == "prefill":
+        step_fn = make_prefill_step(model)
+        args = (params, batch)
+        donate = ()
+    else:  # decode
+        cache = batch.pop("cache")
+        step_fn = make_decode_step(model)
+        from jax.sharding import NamedSharding, PartitionSpec
+        rep = NamedSharding(mesh, PartitionSpec())
+        pos = jax.ShapeDtypeStruct((), jnp.int32, sharding=rep)
+        args = (params, cache, batch["tokens"], pos)
+        donate = (1,)
+    return step_fn, args, donate, mesh, meta
+
+
+class SkipCell(Exception):
+    pass
+
+
+# ---------------------------------------------------------------------------
+# Lower + compile + analyse
+# ---------------------------------------------------------------------------
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             variant: str = "baseline", overrides: Optional[Dict] = None,
+             keep_hlo: bool = False) -> Dict:
+    t0 = time.time()
+    step_fn, args, donate, mesh, meta = build_cell(
+        arch, shape_name, multi_pod, variant, overrides)
+    chips = int(np.prod(list(mesh.shape.values())))
+    ov = dict(VARIANTS.get(variant, {}))
+    ov.update(overrides or {})
+    # Bind the mesh + rule contexts: activation constraints inside the model
+    # resolve against them (jax.set_mesh is also usable as a context manager).
+    from repro.runtime import sharding as shd
+    with jax.set_mesh(mesh), shd.rule_overrides(ov.get("rules")):
+        lowered = jax.jit(step_fn, donate_argnums=donate).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    ca = compiled.cost_analysis() or {}
+    flops = float(ca.get("flops", 0.0))
+    bytes_accessed = float(ca.get("bytes accessed", 0.0))
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    artifact = (f32_widened_stack_bytes(hlo)
+                if meta["kind"] == "train" else 0)
+    arg_b = getattr(mem, "argument_size_in_bytes", 0)
+    tmp_b = getattr(mem, "temp_size_in_bytes", 0)
+    mem_info = dict(
+        argument_bytes=arg_b,
+        output_bytes=getattr(mem, "output_size_in_bytes", 0),
+        temp_bytes=tmp_b,
+        peak_bytes=arg_b + tmp_b,
+        cpu_f32_stack_artifact_bytes=artifact,
+        adjusted_peak_bytes=arg_b + tmp_b - artifact)
+    coll = collective_bytes(hlo)
+
+    # cost_analysis flops on the partitioned module are per-device.
+    t_compute = flops / HW["peak_flops"]
+    t_memory = bytes_accessed / HW["hbm_bw"]
+    t_coll = coll["total"] / HW["ici_bw"]
+    dominant = max(
+        (("compute", t_compute), ("memory", t_memory),
+         ("collective", t_coll)), key=lambda kv: kv[1])[0]
+
+    res = dict(meta, chips=chips, flops_per_device=flops,
+               bytes_per_device=bytes_accessed, collectives=coll,
+               memory=mem_info,
+               cost_analysis={k: float(v) for k, v in ca.items()
+                              if isinstance(v, (int, float))},
+               roofline=dict(t_compute=t_compute, t_memory=t_memory,
+                             t_collective=t_coll, dominant=dominant),
+               lower_s=round(t_lower, 1), compile_s=round(t_compile, 1))
+    if keep_hlo:
+        res["hlo_len"] = len(hlo)
+    return res
+
+
+def cell_path(out_dir, arch, shape_name, multi_pod, variant):
+    tag = "pod2" if multi_pod else "pod1"
+    return os.path.join(out_dir, f"{arch}.{shape_name}.{tag}.{variant}.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    cells = []
+    archs = list_archs() if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = ([False, True] if args.both_meshes else [args.multi_pod])
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                cells.append((a, s, mp))
+
+    for a, s, mp in cells:
+        path = cell_path(args.out, a, s, mp, args.variant)
+        if os.path.exists(path) and not args.force:
+            print(f"cached  {path}")
+            continue
+        tag = "pod2" if mp else "pod1"
+        try:
+            res = run_cell(a, s, mp, args.variant)
+            with open(path, "w") as f:
+                json.dump(res, f, indent=1)
+            r = res["roofline"]
+            print(f"OK      {a:24s} {s:12s} {tag} compile={res['compile_s']:7.1f}s "
+                  f"Tc={r['t_compute']:.3e} Tm={r['t_memory']:.3e} "
+                  f"Tx={r['t_collective']:.3e} dom={r['dominant']}",
+                  flush=True)
+        except SkipCell as e:
+            with open(path, "w") as f:
+                json.dump(dict(arch=a, shape=s, multi_pod=mp, skipped=True,
+                               reason=str(e)), f)
+            print(f"SKIP    {a:24s} {s:12s} {tag}: {e}", flush=True)
+        except Exception as e:
+            print(f"FAIL    {a:24s} {s:12s} {tag}: {type(e).__name__}: {e}",
+                  flush=True)
+            traceback.print_exc(limit=6)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Production mesh construction.
+
+A function (never a module-level constant) so importing this module never
+touches jax device state. Single pod: 16×16 = 256 v5e chips,
+("data", "model"). Multi-pod: 2×16×16 = 512 chips, ("pod", "data",
+"model") — the "pod" axis is the WaterWise migration/geo unit and the axis
+cross-pod gradient compression applies to.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def _auto(n):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_host_mesh(model: int = 1):
+    """Tiny mesh over the real local devices (smoke tests / examples)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n // model, model), ("data", "model"),
+                         axis_types=_auto(2))

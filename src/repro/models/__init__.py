@@ -1,0 +1,15 @@
+"""Workload-side model zoo: the ten assigned architectures in pure JAX.
+
+Every architecture is expressed through one ``ModelConfig`` (configs/base.py)
+and assembled by ``transformer.py`` from family building blocks:
+
+  attention.py   blocked (flash-style) GQA/MQA attention: causal, sliding-
+                 window, bidirectional, cross; decode with sharded KV caches
+  mla.py         Multi-head Latent Attention (DeepSeek-V2 / MiniCPM3) with
+                 compressed-KV decode caches
+  moe.py         expert-parallel MoE (top-k router, sort-based dispatch)
+  ssm.py         Mamba-2 SSD blocks (chunked state-passing scan + O(1) decode)
+  rglru.py       RG-LRU recurrent blocks (RecurrentGemma)
+  model.py       the Model facade: init/specs, train_loss, prefill, decode
+"""
+from repro.models.model import Model

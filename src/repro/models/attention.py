@@ -1,0 +1,237 @@
+"""Blocked (flash-style) multi-head attention in pure JAX.
+
+Memory-safe at 32k+ sequence lengths: scores are never materialized at
+[Sq, Skv] — the KV axis is processed in blocks under an online-softmax
+running maximum (exactly the recurrence the Pallas kernel in
+``kernels/flash_attention`` implements for TPU; this jnp version is both the
+oracle for that kernel and the path XLA partitions for the dry-run).
+
+Supports GQA/MQA (grouped query heads), causal / sliding-window /
+bidirectional masking, cross-attention, and single-token decode against a
+sharded KV cache.
+
+Shapes (canonical): q [B, Sq, Kh, G, D]; k, v [B, Skv, Kh, D] where
+Kh = kv heads, G = query-group fan-out (n_heads = Kh·G).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import common
+from repro.models.common import P, dense_init, zeros_init
+
+NEG_INF = -2.0e38
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+def init(key, d_model, n_heads, n_kv, head_dim, *, qkv_bias=False,
+         dtype=jnp.float32, kv_input_dim=None):
+    """QKV + output projections. ``kv_input_dim`` ≠ None → cross-attention
+    (K/V read from the other stream)."""
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    kv_in = kv_input_dim or d_model
+    p = dict(
+        wq=dense_init(kq, (d_model, n_heads, head_dim),
+                      ("embed", "heads", "head_dim"), dtype),
+        wk=dense_init(kk, (kv_in, n_kv, head_dim),
+                      ("embed", "kv_heads", "head_dim"), dtype),
+        wv=dense_init(kv, (kv_in, n_kv, head_dim),
+                      ("embed", "kv_heads", "head_dim"), dtype),
+        wo=dense_init(ko, (n_heads, head_dim, d_model),
+                      ("heads", "head_dim", "embed"), dtype,
+                      fan_in=n_heads * head_dim),
+    )
+    if qkv_bias:
+        p["bq"] = zeros_init((n_heads, head_dim), ("heads", "head_dim"), dtype)
+        p["bk"] = zeros_init((n_kv, head_dim), ("kv_heads", "head_dim"), dtype)
+        p["bv"] = zeros_init((n_kv, head_dim), ("kv_heads", "head_dim"), dtype)
+    return p
+
+
+def project_q(x, p, rope_theta, positions):
+    """``rope_theta=None`` disables RoPE (the theta value itself may be a
+    traced per-layer array, e.g. gemma3's dual base)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+    if rope_theta is not None:
+        q = common.apply_rope(q, positions, rope_theta)
+    return q
+
+
+def project_kv(x, p, rope_theta, positions):
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if "bk" in p:
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    if rope_theta is not None:
+        k = common.apply_rope(k, positions, rope_theta)
+    return k, v
+
+
+def project_out(o, p):
+    # o: [B, Sq, H, D]
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(o.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Masking
+# ---------------------------------------------------------------------------
+
+def mask_bias(q_pos, kv_pos, kind: str, window: int):
+    """Additive mask bias [Sq, bk] from position vectors."""
+    qp = q_pos[:, None]
+    kp = kv_pos[None, :]
+    valid = kp >= 0                                   # KV padding
+    if kind == "causal":
+        valid &= kp <= qp
+    elif kind == "sliding":
+        valid &= (kp <= qp) & (qp - kp < window)
+    elif kind == "full":
+        pass
+    else:
+        raise ValueError(kind)
+    return jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Blocked attention (train / prefill)
+# ---------------------------------------------------------------------------
+
+def blocked_attention(q, k, v, q_pos, kv_pos, *, kind="causal", window=0,
+                      block_kv=1024, softmax_scale=None):
+    """Online-softmax attention, KV visited in blocks.
+
+    q: [B, Sq, Kh, G, D]; k, v: [B, Skv, Kh, D]. Returns [B, Sq, Kh, G, D].
+    """
+    B, Sq, Kh, G, D = q.shape
+    Skv, Dv = k.shape[1], v.shape[-1]     # Dv may differ from D (MLA)
+    scale = softmax_scale if softmax_scale is not None else 1.0 / np.sqrt(D)
+    bk = min(block_kv, Skv)
+    nblk = int(np.ceil(Skv / bk))
+    pad = nblk * bk - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, (0, pad), constant_values=-1)
+
+    kb = k.reshape(B, nblk, bk, Kh, D).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nblk, bk, Kh, Dv).transpose(1, 0, 2, 3, 4)
+    pb = kv_pos.reshape(nblk, bk)
+
+    qf = (q * scale).astype(jnp.float32)
+
+    @jax.checkpoint
+    def body(carry, blk):
+        # Rematerialized: backward recomputes each block's scores instead of
+        # saving [Sq, bk] s/p for every block — the flash-attention backward
+        # memory profile (residuals per layer stay O(Sq·D), not O(Sq·Skv)).
+        acc, m, l = carry
+        kc, vc, pc = blk
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kc.astype(jnp.float32))
+        s = s + mask_bias(q_pos, pc, kind, window)[None, None, None]
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p_ = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + p_.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p_, vc.astype(jnp.float32))
+        return (acc_new, m_new, l_new), None
+
+    # Seed the scan carry FROM q (data dependence), not jnp.zeros: SPMD
+    # propagation otherwise replicates the loop carry across the batch
+    # sharding, blowing per-device memory by the data-parallel factor.
+    qT = qf.transpose(0, 2, 3, 1, 4)                        # [B,Kh,G,Sq,D]
+    seed = qT[..., :1] * 0.0                                # [B,Kh,G,Sq,1]
+    acc0 = seed + jnp.zeros((Dv,), jnp.float32)
+    m0 = seed[..., 0] + NEG_INF
+    l0 = seed[..., 0]
+    (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0), (kb, vb, pb))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.transpose(0, 3, 1, 2, 4).astype(q.dtype)   # [B,Sq,Kh,G,D]
+
+
+# ---------------------------------------------------------------------------
+# Decode attention (single query position against a cache)
+# ---------------------------------------------------------------------------
+
+def decode_attention(q, cache_k, cache_v, pos, *, kind="causal", window=0,
+                     softmax_scale=None):
+    """q: [B, 1, Kh, G, D]; cache_k/v: [B, Smax, Kh, D]; pos: scalar int —
+    the position being generated. The cache already contains this token's
+    own K/V at index ``pos`` (self-attention includes itself). ``full`` kind
+    (cross-attention) attends the whole cache."""
+    B, _, Kh, G, D = q.shape
+    Smax = cache_k.shape[1]
+    scale = softmax_scale if softmax_scale is not None else 1.0 / np.sqrt(D)
+    kv_pos = jax.lax.broadcasted_iota(jnp.int32, (Smax,), 0)
+    if kind == "full":
+        valid = jnp.ones((Smax,), bool)
+    else:
+        valid = kv_pos <= pos
+        if kind == "sliding":      # window may be a traced per-layer value
+            valid &= kv_pos > pos - window
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", (q * scale).astype(jnp.float32),
+                   cache_k.astype(jnp.float32))
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    p_ = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bhgqd", p_, cache_v.astype(jnp.float32))
+    return out.transpose(0, 3, 1, 2, 4).astype(q.dtype)
+
+
+def update_cache(cache_k, cache_v, k_new, v_new, pos):
+    """Insert [B, 1, Kh, D] new KV at position ``pos``."""
+    ck = jax.lax.dynamic_update_slice_in_dim(cache_k, k_new.astype(
+        cache_k.dtype), pos, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache_v, v_new.astype(
+        cache_v.dtype), pos, axis=1)
+    return ck, cv
+
+
+# ---------------------------------------------------------------------------
+# Full module forward (used by transformer.py)
+# ---------------------------------------------------------------------------
+
+def apply(x, p, *, n_kv, n_heads, positions, kind="causal", window=0,
+          rope_theta=10000.0, block_kv=1024, kv_x=None, kv_positions=None,
+          softmax_scale=None, cache=None, decode_pos=None):
+    """One attention sub-layer.
+
+    Train/prefill (cache=None): blocked attention; ``kv_x`` ≠ None makes it
+    cross-attention (kind should be "full").
+    Decode (cache=(k, v), decode_pos set): x is [B, 1, d]. Self-attention
+    writes this token's K/V at ``decode_pos`` then attends [0, decode_pos];
+    cross-attention (kind="full") attends the static (encoder/image) cache
+    without writing.
+    Returns (out, new_cache_or_None).
+    """
+    G = n_heads // n_kv
+    q = project_q(x, p, rope_theta, positions)
+    B, Sq = q.shape[:2]
+    q = q.reshape(B, Sq, n_kv, G, -1)
+
+    if cache is None:
+        src = x if kv_x is None else kv_x
+        kv_pos = positions if kv_positions is None else kv_positions
+        k, v = project_kv(src, p, rope_theta, kv_pos)
+        out = blocked_attention(q, k, v, positions, kv_pos, kind=kind,
+                                window=window, block_kv=block_kv,
+                                softmax_scale=softmax_scale)
+        new_cache = None
+    else:
+        ck, cv = cache
+        if kind != "full":          # self-attention: write this token's KV
+            k, v = project_kv(x, p, rope_theta, positions)
+            ck, cv = update_cache(ck, cv, k, v, decode_pos)
+        out = decode_attention(q, ck, cv, decode_pos, kind=kind,
+                               window=window, softmax_scale=softmax_scale)
+        new_cache = (ck, cv)
+
+    out = out.reshape(B, Sq, n_heads, -1)
+    return project_out(out, p), new_cache

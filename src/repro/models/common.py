@@ -1,0 +1,203 @@
+"""Shared model building blocks: params-with-axes, norms, MLPs, RoPE, embed.
+
+Parameter convention
+--------------------
+Init functions return pytrees whose leaves are ``P(value, axes)`` — the
+array together with its *logical* sharding axes (e.g. ("embed", "heads",
+"head_dim")). ``split_tree`` separates them into (params, specs); the
+runtime resolves logical axes to mesh ``PartitionSpec``s via
+``runtime/sharding.py``. Keeping value+axes co-located at init time makes it
+impossible for the two trees to drift.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class P:
+    """A parameter leaf: array + logical sharding axes.
+
+    Registered as a pytree node whose *aux data* is the axes tuple — so
+    ``jax.vmap`` over an init function stacks the value while the logical
+    axes ride along statically (then ``stack_axes`` prepends "layers").
+    """
+    __slots__ = ("value", "axes")
+
+    def __init__(self, value, axes: Tuple[str, ...]):
+        self.value = value
+        self.axes = tuple(axes)
+
+    def __repr__(self):
+        return f"P({getattr(self.value, 'shape', self.value)}, {self.axes})"
+
+
+jax.tree_util.register_pytree_node(
+    P, lambda p: ((p.value,), p.axes), lambda axes, ch: P(ch[0], axes))
+
+
+def is_param(x) -> bool:
+    return isinstance(x, P)
+
+
+def split_tree(tree):
+    """(params, specs) from a tree of P leaves."""
+    params = jax.tree.map(lambda p: p.value, tree, is_leaf=is_param)
+    specs = jax.tree.map(lambda p: p.axes, tree, is_leaf=is_param)
+    return params, specs
+
+
+def stack_axes(tree, axis_name: str = "layers"):
+    """Prepend a stacking axis to every P leaf's logical axes (used after
+    vmap-stacking per-layer inits)."""
+    return jax.tree.map(lambda p: P(p.value, (axis_name,) + p.axes), tree,
+                        is_leaf=is_param)
+
+
+def vmap_stack(init_fn, key, n: int):
+    """Stack ``n`` copies of ``init_fn(key_i)`` along a leading layer axis."""
+    keys = jax.random.split(key, n)
+    return stack_axes(jax.vmap(init_fn)(keys))
+
+
+def trunc_normal(key, shape, scale, dtype):
+    return (scale * jax.random.truncated_normal(
+        key, -2.0, 2.0, shape, jnp.float32)).astype(dtype)
+
+
+def dense_init(key, shape, axes, dtype, fan_in=None):
+    """Fan-in-scaled init (the MaxText default)."""
+    fan_in = fan_in if fan_in is not None else shape[0]
+    return P(trunc_normal(key, shape, 1.0 / np.sqrt(fan_in), dtype), axes)
+
+
+def embed_init(key, shape, axes, dtype):
+    return P(trunc_normal(key, shape, 1.0, dtype), axes)
+
+
+def zeros_init(shape, axes, dtype):
+    return P(jnp.zeros(shape, dtype), axes)
+
+
+def ones_init(shape, axes, dtype):
+    return P(jnp.ones(shape, dtype), axes)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, scale, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def norm_init(d, kind, dtype):
+    if kind == "rmsnorm":
+        return dict(scale=zeros_init((d,), ("embed_nosplit",), dtype))
+    return dict(scale=ones_init((d,), ("embed_nosplit",), dtype),
+                bias=zeros_init((d,), ("embed_nosplit",), dtype))
+
+
+def apply_norm(x, p, kind):
+    if kind == "rmsnorm":
+        return rms_norm(x, p["scale"])
+    return layer_norm(x, p["scale"], p["bias"])
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d_model, d_ff, dtype, gate="silu"):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return dict(
+        wi=dense_init(k1, (d_model, d_ff), ("embed", "mlp"), dtype),
+        wg=dense_init(k2, (d_model, d_ff), ("embed", "mlp"), dtype),
+        wo=dense_init(k3, (d_ff, d_model), ("mlp", "embed"), dtype,
+                      fan_in=d_ff),
+    )
+
+
+def mlp_apply(x, p, gate="silu"):
+    act = jax.nn.silu if gate == "silu" else jax.nn.gelu
+    h = act(x @ p["wi"].astype(x.dtype)) * (x @ p["wg"].astype(x.dtype))
+    return h @ p["wo"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: [..., seq, heads, head_dim]; positions: [..., seq]."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # [d/2]
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs  # [...,s,1,d/2]
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Token embedding + logits head (padded vocab)
+# ---------------------------------------------------------------------------
+
+def pad_vocab(vocab: int, multiple: int = 2048) -> int:
+    return int(np.ceil(vocab / multiple) * multiple)
+
+
+def embedding_init(key, vocab_padded, d_model, dtype, tied=True):
+    k1, k2 = jax.random.split(key)
+    # 1/sqrt(d) rows keep tied logits ~unit-scale at init (models with
+    # embed_scale=True multiply activations back up by sqrt(d), gemma-style).
+    out = dict(tokens=P(trunc_normal(k1, (vocab_padded, d_model),
+                                     1.0 / np.sqrt(d_model), dtype),
+                        ("vocab", "embed")))
+    if not tied:
+        out["head"] = dense_init(k2, (d_model, vocab_padded),
+                                 ("embed", "vocab"), dtype)
+    return out
+
+
+def embed_tokens(tokens, p, dtype):
+    return p["tokens"].astype(dtype)[tokens]
+
+
+def logits_from_hidden(h, p, true_vocab, dtype):
+    table = p.get("head")
+    if table is None:
+        logits = h @ p["tokens"].astype(dtype).T
+    else:
+        logits = h @ table.astype(dtype)
+    # Mask the padded vocab tail out of the partition function.
+    iota = jax.lax.broadcasted_iota(jnp.int32, (logits.shape[-1],), 0)
+    return jnp.where(iota < true_vocab, logits, -1e9)
+
+
+def softmax_xent(logits, labels):
+    """Mean cross-entropy in fp32. labels: int32 same leading shape."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - ll)

@@ -1,0 +1,110 @@
+"""Multi-head Latent Attention (DeepSeek-V2, MiniCPM3).
+
+KV is compressed into a low-rank latent c_kv (kv_lora_rank) plus one shared
+RoPE key head (d_rope). Train/prefill expands to full K/V and reuses the
+blocked flash attention. Decode uses the *absorbed* form: the up-projection
+W^UK folds into the query and W^UV into the output, so the decode cache is
+only [B, S, kv_lora + d_rope] — the property that makes DeepSeek-V2's 32k
+decode cheap (and its checkpoint migration in WaterWise terms light).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention, common
+from repro.models.common import dense_init, norm_init, apply_norm
+
+
+def init(key, d_model, n_heads, *, q_lora, kv_lora, d_nope, d_rope, d_v,
+         dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    p = dict(
+        wkv_a=dense_init(ks[0], (d_model, kv_lora + d_rope),
+                         ("embed", "mla_latent"), dtype),
+        kv_norm=norm_init(kv_lora, "rmsnorm", dtype),
+        wkv_b_k=dense_init(ks[1], (kv_lora, n_heads, d_nope),
+                           ("mla_latent", "heads", "head_dim"), dtype),
+        wkv_b_v=dense_init(ks[2], (kv_lora, n_heads, d_v),
+                           ("mla_latent", "heads", "head_dim"), dtype),
+        wo=dense_init(ks[3], (n_heads, d_v, d_model),
+                      ("heads", "head_dim", "embed"), dtype,
+                      fan_in=n_heads * d_v),
+    )
+    if q_lora:
+        p["wq_a"] = dense_init(ks[4], (d_model, q_lora),
+                               ("embed", "mla_latent"), dtype)
+        p["q_norm"] = norm_init(q_lora, "rmsnorm", dtype)
+        p["wq_b"] = dense_init(ks[5], (q_lora, n_heads, d_nope + d_rope),
+                               ("mla_latent", "heads", "head_dim"), dtype)
+    else:
+        p["wq"] = dense_init(ks[4], (d_model, n_heads, d_nope + d_rope),
+                             ("embed", "heads", "head_dim"), dtype)
+    return p
+
+
+def _queries(x, p, d_nope, d_rope, positions):
+    if "wq_a" in p:
+        cq = apply_norm(x @ p["wq_a"].astype(x.dtype), p["q_norm"], "rmsnorm")
+        q = jnp.einsum("bsl,lhk->bshk", cq, p["wq_b"].astype(x.dtype))
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    q_nope, q_rope = q[..., :d_nope], q[..., d_nope:]
+    q_rope = common.apply_rope(q_rope, positions)
+    return q_nope, q_rope
+
+
+def _latent(x, p, kv_lora, positions):
+    ckr = x @ p["wkv_a"].astype(x.dtype)
+    c_kv, k_rope = ckr[..., :kv_lora], ckr[..., kv_lora:]
+    c_kv = apply_norm(c_kv, p["kv_norm"], "rmsnorm")
+    k_rope = common.apply_rope(k_rope[:, :, None, :], positions)[:, :, 0]
+    return c_kv, k_rope
+
+
+def apply(x, p, *, n_heads, q_lora, kv_lora, d_nope, d_rope, d_v,
+          positions, block_kv=1024, cache=None, decode_pos=None):
+    """Returns (out, new_cache). Cache = (c_kv [B,S,kv_lora],
+    k_rope [B,S,d_rope])."""
+    B, Sq, _ = x.shape
+    scale = 1.0 / np.sqrt(d_nope + d_rope)
+    q_nope, q_rope = _queries(x, p, d_nope, d_rope, positions)
+
+    if cache is None:
+        c_kv, k_rope = _latent(x, p, kv_lora, positions)
+        # Expand to per-head K/V, run blocked flash attention (MHA: Kh=H,G=1).
+        k_nope = jnp.einsum("bsl,lhk->bshk", c_kv,
+                            p["wkv_b_k"].astype(x.dtype))
+        v = jnp.einsum("bsl,lhv->bshv", c_kv, p["wkv_b_v"].astype(x.dtype))
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                      (B, Sq, n_heads, d_rope))], axis=-1)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out = attention.blocked_attention(
+            q[:, :, :, None, :], k, v, positions, positions, kind="causal",
+            block_kv=block_kv, softmax_scale=scale)[:, :, :, 0]
+        new_cache = None
+    else:
+        cc, cr = cache
+        c_new, r_new = _latent(x, p, kv_lora, positions)
+        cc = jax.lax.dynamic_update_slice_in_dim(
+            cc, c_new.astype(cc.dtype), decode_pos, axis=1)
+        cr = jax.lax.dynamic_update_slice_in_dim(
+            cr, r_new.astype(cr.dtype), decode_pos, axis=1)
+        # Absorbed attention over the compressed cache.
+        q_lat = jnp.einsum("bshk,lhk->bshl", q_nope,
+                           p["wkv_b_k"].astype(x.dtype))   # [B,1,H,kv_lora]
+        s = (jnp.einsum("bshl,btl->bhst", q_lat, cc.astype(x.dtype))
+             + jnp.einsum("bshk,btk->bhst", q_rope, cr.astype(x.dtype)))
+        s = (s * scale).astype(jnp.float32)
+        kv_pos = jax.lax.broadcasted_iota(jnp.int32, (cc.shape[1],), 0)
+        s = jnp.where(kv_pos[None, None, None, :] <= decode_pos, s,
+                      attention.NEG_INF)
+        w = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+        o_lat = jnp.einsum("bhst,btl->bshl", w, cc.astype(x.dtype))
+        out = jnp.einsum("bshl,lhv->bshv", o_lat,
+                         p["wkv_b_v"].astype(x.dtype))
+        new_cache = (cc, cr)
+
+    return jnp.einsum("bshv,hvd->bsd", out, p["wo"].astype(x.dtype)), new_cache

@@ -1,0 +1,183 @@
+"""Model facade: init/specs, train loss, prefill, decode, cache builders.
+
+The cache builders return P-leaf trees (value + logical axes) whose
+*structure matches exactly what transformer.apply's scans expect* — the same
+builders serve real serving (zeros) and the dry-run (eval_shape →
+ShapeDtypeStruct with shardings attached).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import common, transformer
+from repro.models.common import P, is_param, split_tree, softmax_xent
+
+
+class Model:
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    # -- params ---------------------------------------------------------------
+
+    def init(self, key):
+        return split_tree(transformer.init(self.cfg, key))
+
+    def abstract_params(self):
+        """(ShapeDtypeStruct tree, logical-axes tree) without allocation."""
+        tree = jax.eval_shape(
+            lambda k: transformer.init(self.cfg, k), jax.random.PRNGKey(0))
+        return split_tree(tree)
+
+    def param_count(self) -> int:
+        shapes, _ = self.abstract_params()
+        return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(shapes))
+
+    # -- steps ----------------------------------------------------------------
+
+    def loss(self, params, batch):
+        logits, _ = transformer.apply(self.cfg, params, batch, "train")
+        return softmax_xent(logits, batch["labels"])
+
+    def prefill(self, params, batch):
+        logits, cache = transformer.apply(self.cfg, params, batch, "prefill")
+        return logits[:, -1], cache
+
+    def decode(self, params, cache, tokens, pos):
+        logits, cache = transformer.apply(self.cfg, params,
+                                          dict(tokens=tokens), "decode",
+                                          cache=cache, decode_pos=pos)
+        return logits[:, 0], cache
+
+    # -- cache builders --------------------------------------------------------
+
+    def _kv_cache(self, B, S):
+        cfg = self.cfg
+        dt = cfg.compute_dtype
+        mk = lambda: P(jnp.zeros((B, S, cfg.n_kv, cfg.head_dim_), dt),
+                       ("cache_batch", "cache_seq", "kv_heads", "head_dim"))
+        return (mk(), mk())
+
+    def _mla_cache(self, B, S):
+        cfg = self.cfg
+        dt = cfg.compute_dtype
+        return (P(jnp.zeros((B, S, cfg.kv_lora), dt),
+                  ("cache_batch", "cache_seq", "mla_latent")),
+                P(jnp.zeros((B, S, cfg.d_rope), dt),
+                  ("cache_batch", "cache_seq", "rope_dim")))
+
+    def _ssm_cache(self, B):
+        cfg = self.cfg
+        dt = cfg.compute_dtype
+        conv_dim = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+        H = cfg.d_inner // cfg.ssm_head_dim
+        return dict(
+            conv=P(jnp.zeros((B, 3, conv_dim), dt),
+                   ("cache_batch", "conv", "conv_channels")),
+            state=P(jnp.zeros((B, H, cfg.ssm_head_dim, cfg.ssm_state), dt),
+                    ("cache_batch", "heads", "head_dim", "ssm_state")))
+
+    def _rglru_cache(self, B):
+        cfg = self.cfg
+        dt = cfg.compute_dtype
+        return dict(conv=P(jnp.zeros((B, 3, cfg.lru_width), dt),
+                           ("cache_batch", "conv", "mlp")),
+                    state=P(jnp.zeros((B, cfg.lru_width), dt),
+                            ("cache_batch", "mlp")))
+
+    @staticmethod
+    def _stack(tree, n):
+        return jax.tree.map(
+            lambda p: P(jnp.zeros((n,) + p.value.shape, p.value.dtype),
+                        ("layers",) + p.axes), tree, is_leaf=is_param)
+
+    def init_cache(self, batch: int, max_seq: int, *, src_len: int = 0,
+                   n_img: int = 0):
+        """Decode cache (P-leaf tree). ``split_tree`` it before use."""
+        cfg = self.cfg
+        dt = cfg.compute_dtype
+        if cfg.family in ("decoder", "gemma3"):
+            if cfg.ssm:
+                layer = self._ssm_cache(batch)
+            elif cfg.mla:
+                layer = self._mla_cache(batch, max_seq)
+            else:
+                layer = self._kv_cache(batch, max_seq)
+            rest = self._stack(layer, cfg.n_layers - cfg.first_dense)
+            dense = (self._stack(self._kv_cache(batch, max_seq)
+                                 if not cfg.mla else
+                                 self._mla_cache(batch, max_seq),
+                                 cfg.first_dense)
+                     if cfg.first_dense else None)
+            return (dense, rest)
+        if cfg.family == "griffin":
+            n_groups, rem = divmod(cfg.n_layers, 3)
+            group = dict(rec1=self._rglru_cache(batch),
+                         rec2=self._rglru_cache(batch),
+                         attn=self._kv_cache(batch, max_seq))
+            out = self._stack(group, n_groups)
+            tail = self._stack(self._rglru_cache(batch), rem) if rem else None
+            return (out, tail)
+        if cfg.family == "vision":
+            per = cfg.cross_every
+            img = (P(jnp.zeros((batch, n_img, cfg.n_kv, cfg.head_dim_), dt),
+                     ("cache_batch", "cache_img", "kv_heads", "head_dim")),
+                   P(jnp.zeros((batch, n_img, cfg.n_kv, cfg.head_dim_), dt),
+                     ("cache_batch", "cache_img", "kv_heads", "head_dim")))
+            group = dict(img=img,
+                         selfs=self._stack(self._kv_cache(batch, max_seq),
+                                           per - 1))
+            return self._stack(group, cfg.n_layers // per)
+        if cfg.family == "encdec":
+            layer = dict(
+                self=self._kv_cache(batch, max_seq),
+                cross=(P(jnp.zeros((batch, src_len, cfg.n_kv,
+                                    cfg.head_dim_), dt),
+                         ("cache_batch", "cache_img", "kv_heads",
+                          "head_dim")),
+                       P(jnp.zeros((batch, src_len, cfg.n_kv,
+                                    cfg.head_dim_), dt),
+                         ("cache_batch", "cache_img", "kv_heads",
+                          "head_dim"))))
+            return self._stack(layer, cfg.n_layers)
+        raise ValueError(cfg.family)
+
+    # -- input builders ---------------------------------------------------------
+
+    def make_inputs(self, shape, concrete: bool = False,
+                    enc_ctx: int = 4096):
+        """P-leaf tree of step inputs for a ShapeSpec cell.
+
+        train: {tokens, labels [, frames | patches]}
+        prefill: {tokens [, frames | patches]}
+        decode: {tokens [B,1], cache, pos}
+        ``concrete=True`` materializes arrays (smoke tests); otherwise call
+        under eval_shape / use .value ShapeDtypeStructs for the dry-run.
+        """
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        dt = cfg.compute_dtype
+        tok = lambda s: P(jnp.zeros((B, s), jnp.int32),
+                          ("act_batch", "act_seq"))
+        out: Dict[str, Any] = {}
+        if shape.kind in ("train", "prefill"):
+            out["tokens"] = tok(S)
+            if shape.kind == "train":
+                out["labels"] = tok(S)
+            if cfg.family == "encdec":
+                out["frames"] = P(jnp.zeros((B, S, cfg.d_model), dt),
+                                  ("act_batch", "act_seq", "act_embed"))
+            if cfg.family == "vision":
+                out["patches"] = P(
+                    jnp.zeros((B, cfg.n_img_tokens, cfg.d_model), dt),
+                    ("act_batch", "act_img", "act_embed"))
+        else:  # decode
+            out["tokens"] = tok(1)
+            out["cache"] = self.init_cache(
+                B, S, src_len=(enc_ctx if cfg.family == "encdec" else 0),
+                n_img=cfg.n_img_tokens)
+        return out

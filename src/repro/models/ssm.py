@@ -1,0 +1,184 @@
+"""Mamba-2 blocks via SSD (state-space duality) — arXiv:2405.21060.
+
+Training/prefill runs the chunked SSD algorithm: the sequence is split into
+chunks; within a chunk the recurrence is computed in its quadratic "dual"
+attention form (MXU-friendly), and a [H, P, N] state is passed between
+chunks with a sequential lax.scan. Decode is the O(1) recurrent update.
+
+Shapes: x [B, S, H, P] (H heads × P head_dim = d_inner), B/C [B, S, G, N]
+(G groups broadcast over heads), dt [B, S, H], A [H] (negative).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import P as ParamP, dense_init, zeros_init, ones_init
+
+
+# ---------------------------------------------------------------------------
+# Core SSD scan (chunked)
+# ---------------------------------------------------------------------------
+
+def _segsum(a):
+    """Stable segment-sum: out[..., i, j] = sum a[..., j+1..i] (−inf j>i)."""
+    L = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool), 0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int = 256, init_state=None):
+    """Returns (y [B,S,H,P], final_state [B,H,P,N]).
+
+    All computation in fp32 internally for the cumulative sums.
+    """
+    b, S, H, Pd = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    S0 = S
+    pad = (-S) % chunk
+    if pad:
+        # dt=0 padding is exact: a = dt·A = 0 ⇒ decay 1 (state preserved),
+        # x·dt = 0 ⇒ nothing injected; padded outputs are sliced away.
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        S = S + pad
+    nc = S // chunk
+    rep = H // G
+
+    xf = x.astype(jnp.float32)
+    a = (dt.astype(jnp.float32) * A.astype(jnp.float32))       # [B,S,H] (<0)
+    xdt = xf * dt.astype(jnp.float32)[..., None]               # fold dt into x
+    Bf = jnp.repeat(Bm.astype(jnp.float32), rep, axis=2)       # [B,S,H,N]
+    Cf = jnp.repeat(Cm.astype(jnp.float32), rep, axis=2)
+
+    def to_chunks(t):
+        return t.reshape(b, nc, chunk, *t.shape[2:])
+
+    xc, ac, Bc, Cc = map(to_chunks, (xdt, a, Bf, Cf))
+
+    def per_chunk(xk, ak, Bk, Ck, state):
+        # ak: [B,L,H] → cumulative decay within chunk
+        acs = jnp.cumsum(ak, axis=1)                           # [B,L,H]
+        # Intra-chunk (dual quadratic form):
+        Lmat = jnp.exp(_segsum(ak.transpose(0, 2, 1)))         # [B,H,L,L]
+        scores = jnp.einsum("blhn,bshn->bhls", Ck, Bk) * Lmat
+        y_intra = jnp.einsum("bhls,bshp->blhp", scores, xk)
+        # Inter-chunk: contribution of the carried state.
+        y_inter = jnp.einsum("blhn,bhpn,blh->blhp", Ck, state,
+                             jnp.exp(acs))
+        # New state: decay old + inject this chunk.
+        decay_tail = jnp.exp(acs[:, -1:, :] - acs)             # [B,L,H]
+        state_new = (state * jnp.exp(acs[:, -1, :])[..., None, None]
+                     + jnp.einsum("blhn,blhp,blh->bhpn", Bk, xk, decay_tail))
+        return y_intra + y_inter, state_new
+
+    def body(state, inp):
+        xk, ak, Bk, Ck = inp
+        y, state = per_chunk(xk, ak, Bk, Ck, state)
+        return state, y
+
+    # Carry seeded from x (data dependence) so SPMD keeps it batch-sharded.
+    state0 = (xf[:, 0, :, :, None] * 0.0 + jnp.zeros((N,), jnp.float32)
+              if init_state is None else init_state.astype(jnp.float32))
+    xs = (xc.transpose(1, 0, 2, 3, 4), ac.transpose(1, 0, 2, 3),
+          Bc.transpose(1, 0, 2, 3, 4), Cc.transpose(1, 0, 2, 3, 4))
+    final, ys = jax.lax.scan(body, state0, xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, S, H, Pd)[:, :S0]
+    return y.astype(x.dtype), final.astype(x.dtype)
+
+
+def ssd_step(x, dt, A, Bm, Cm, state):
+    """O(1) decode: x [B,1,H,P], state [B,H,P,N] → (y, new_state)."""
+    rep = state.shape[1] // Bm.shape[2]
+    Bf = jnp.repeat(Bm.astype(jnp.float32), rep, axis=2)[:, 0]  # [B,H,N]
+    Cf = jnp.repeat(Cm.astype(jnp.float32), rep, axis=2)[:, 0]
+    a = jnp.exp(dt.astype(jnp.float32)[:, 0] * A.astype(jnp.float32))  # [B,H]
+    xdt = (x.astype(jnp.float32) * dt.astype(jnp.float32)[..., None])[:, 0]
+    state_new = (state.astype(jnp.float32) * a[..., None, None]
+                 + jnp.einsum("bhn,bhp->bhpn", Bf, xdt))
+    y = jnp.einsum("bhn,bhpn->bhp", Cf, state_new)
+    return y[:, None].astype(x.dtype), state_new.astype(state.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 block (in_proj → conv → SSD → gate → out_proj)
+# ---------------------------------------------------------------------------
+
+def block_init(key, d_model, *, d_inner, head_dim, n_groups, d_state,
+               d_conv=4, dtype=jnp.float32):
+    H = d_inner // head_dim
+    ks = jax.random.split(key, 5)
+    conv_dim = d_inner + 2 * n_groups * d_state
+    return dict(
+        in_proj=dense_init(ks[0],
+                           (d_model, 2 * d_inner + 2 * n_groups * d_state + H),
+                           ("embed", "mlp"), dtype),
+        conv_w=zeros_init((d_conv, conv_dim), ("conv", "mlp"), dtype),
+        conv_b=zeros_init((conv_dim,), ("mlp",), dtype),
+        A_log=zeros_init((H,), ("heads_nosplit",), jnp.float32),
+        D=ones_init((H,), ("heads_nosplit",), jnp.float32),
+        dt_bias=zeros_init((H,), ("heads_nosplit",), jnp.float32),
+        norm_scale=zeros_init((d_inner,), ("mlp",), dtype),
+        out_proj=dense_init(ks[1], (d_inner, d_model), ("mlp", "embed"),
+                            dtype, fan_in=d_inner),
+    )
+
+
+def _causal_conv(u, w, b, state=None):
+    """Depthwise causal conv, width d_conv. u: [B, S, C]; w: [d_conv, C].
+
+    state: [B, d_conv-1, C] trailing context for decode. Returns (y, new
+    state of the last d_conv-1 inputs)."""
+    d_conv = w.shape[0]
+    if state is None:
+        u_pad = jnp.pad(u, ((0, 0), (d_conv - 1, 0), (0, 0)))
+    else:
+        u_pad = jnp.concatenate([state.astype(u.dtype), u], axis=1)
+    y = sum(u_pad[:, i:i + u.shape[1], :] * w[i] for i in range(d_conv))
+    new_state = u_pad[:, -(d_conv - 1):, :]
+    return jax.nn.silu(y + b), new_state
+
+
+def block_apply(x, p, cfg, mode="train", cache=None, chunk=256):
+    """cfg: object with d_inner, ssm_head_dim, ssm_groups, ssm_state.
+    mode: train (no cache out) | prefill (returns final state as cache) |
+    decode (cache: dict(conv=[B,3,C], state=[B,H,P,N]), O(1) update)."""
+    d_inner = cfg.d_inner
+    Pd, G, N = cfg.ssm_head_dim, cfg.ssm_groups, cfg.ssm_state
+    H = d_inner // Pd
+    Bsz, S, _ = x.shape
+
+    zxbcdt = x @ p["in_proj"].astype(x.dtype)
+    z, xbc, dt_raw = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner + 2 * G * N], axis=-1)
+    conv_state = None if mode != "decode" else cache["conv"]
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"].astype(x.dtype),
+                                   p["conv_b"].astype(x.dtype), conv_state)
+    xs, Bm, Cm = jnp.split(xbc, [d_inner, d_inner + G * N], axis=-1)
+    xs = xs.reshape(Bsz, S, H, Pd)
+    Bm = Bm.reshape(Bsz, S, G, N)
+    Cm = Cm.reshape(Bsz, S, G, N)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    if mode == "decode":
+        y, ssm_state = ssd_step(xs, dt, A, Bm, Cm, cache["state"])
+        new_cache = dict(conv=conv_state, state=ssm_state)
+    else:
+        y, final = ssd_chunked(xs, dt, A, Bm, Cm, chunk=min(chunk, S))
+        new_cache = (dict(conv=conv_state, state=final)
+                     if mode == "prefill" else None)
+
+    y = y + xs * p["D"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(Bsz, S, d_inner)
+    # Gated RMSNorm (Mamba-2 norm-before-out_proj).
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), -1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-6)
+         * (1.0 + p["norm_scale"].astype(jnp.float32))).astype(x.dtype)
+    return y @ p["out_proj"].astype(x.dtype), new_cache

@@ -1,0 +1,3 @@
+from repro.optim.adamw import adamw, cosine_schedule, clip_by_global_norm
+from repro.optim.compression import (compress_int8, decompress_int8,
+                                     topk_error_feedback)

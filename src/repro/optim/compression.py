@@ -1,0 +1,68 @@
+"""Gradient compression for cross-pod sync (distributed-optimization tricks).
+
+Two schemes, both applied on the "pod" axis where inter-pod bandwidth is the
+scarce resource (data-center interconnect, not ICI):
+
+  int8 stochastic rounding   8× volume reduction; unbiased; stateless.
+  top-k + error feedback     k-sparsification with residual accumulation —
+                             the EF state rides in the train loop's carry.
+
+Both are pure-JAX transforms of the gradient tree — they lower to
+quantize → all-reduce(int8/sparse) → dequantize patterns the compiler can
+overlap with backprop.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_int8(g, key):
+    """Per-tensor scale + stochastic-rounded int8 payload."""
+    gf = g.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    scaled = gf / scale
+    noise = jax.random.uniform(key, g.shape, jnp.float32, -0.5, 0.5)
+    q = jnp.clip(jnp.round(scaled + noise), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q, scale, dtype):
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def int8_roundtrip(grads, key):
+    """Quantize-dequantize the whole gradient tree (what crosses pods)."""
+    leaves, treedef = jax.tree.flatten(grads)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for g, k in zip(leaves, keys):
+        q, s = compress_int8(g, k)
+        out.append(decompress_int8(q, s, g.dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def topk_error_feedback(grads, residual, frac: float = 0.01
+                        ) -> Tuple[Any, Any]:
+    """Keep the top-``frac`` magnitude entries per tensor; the rest
+    accumulates into ``residual`` (error feedback, Stich et al.)."""
+    def one(g, r):
+        acc = g.astype(jnp.float32) + r
+        k = max(int(acc.size * frac), 1)
+        flat = jnp.abs(acc).reshape(-1)
+        thresh = jax.lax.top_k(flat, k)[0][-1]
+        mask = jnp.abs(acc) >= thresh
+        sent = jnp.where(mask, acc, 0.0)
+        return sent.astype(g.dtype), acc - sent
+
+    if residual is None:
+        residual = jax.tree.map(
+            lambda g: jnp.zeros_like(g, jnp.float32), grads)
+    pairs = jax.tree.map(one, grads, residual)
+    sent = jax.tree.map(lambda t: t[0], pairs,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    res = jax.tree.map(lambda t: t[1], pairs,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    return sent, res

@@ -1,0 +1,92 @@
+"""Elastic execution: failure detection, straggler mitigation, re-mesh
+restore.
+
+On a real fleet the runtime watches per-step heartbeats; when a host dies
+(or a pod is reclaimed by the WaterWise scheduler for migration), training
+restarts from the latest atomic checkpoint on whatever mesh is available —
+``restore_checkpoint`` re-shards every leaf, so an 8-device job can resume
+on 4 or 16 devices. This module provides the control-plane pieces that are
+hardware-independent and therefore fully testable on CPU:
+
+  StepWatchdog      deadline per step; a straggling/hung step raises and
+                    triggers restart-from-checkpoint (synchronous SPMD makes
+                    one straggler everyone's straggler — detect & evict).
+  FailureInjector   deterministic fault schedule for tests/simulations.
+  run_elastic       the restart loop: run → (maybe) crash → restore → rerun,
+                    preserving exactly-once step accounting.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+from repro.checkpoint import (AsyncCheckpointer, latest_step,
+                              restore_checkpoint)
+
+
+class StepWatchdog:
+    """Flags steps that exceed ``deadline_s`` (straggler mitigation)."""
+
+    def __init__(self, deadline_s: float):
+        self.deadline_s = deadline_s
+        self.history: List[float] = []
+
+    def observe(self, step_time_s: float) -> bool:
+        self.history.append(step_time_s)
+        return step_time_s > self.deadline_s
+
+    @property
+    def p50(self) -> float:
+        h = sorted(self.history)
+        return h[len(h) // 2] if h else 0.0
+
+
+@dataclasses.dataclass
+class FailureInjector:
+    """Deterministic crash schedule: fail right after the listed steps."""
+    fail_after_steps: tuple = ()
+    fired: set = dataclasses.field(default_factory=set)
+
+    def check(self, step: int):
+        if step in self.fail_after_steps and step not in self.fired:
+            self.fired.add(step)
+            raise RuntimeError(f"injected failure at step {step}")
+
+
+def run_elastic(state, step_fn: Callable, batch_fn: Callable, *,
+                num_steps: int, ckpt_dir: str, ckpt_every: int = 10,
+                shardings=None, injector: Optional[FailureInjector] = None,
+                watchdog: Optional[StepWatchdog] = None,
+                max_restarts: int = 10) -> Dict:
+    """Run ``num_steps`` of ``state = step_fn(state, batch, step)`` with
+    checkpoint/restart. Returns dict(state, restarts, steps_run)."""
+    ckpt = AsyncCheckpointer(ckpt_dir, every=ckpt_every)
+    restarts = 0
+    step = 0
+    steps_run = 0
+    while step < num_steps:
+        try:
+            t0 = time.perf_counter()
+            state = step_fn(state, batch_fn(step), step)
+            dt = time.perf_counter() - t0
+            if watchdog is not None and watchdog.observe(dt):
+                raise TimeoutError(f"straggling step {step}: {dt:.3f}s")
+            steps_run += 1
+            step += 1
+            ckpt.maybe_save(step, state)
+            if injector is not None:
+                injector.check(step)
+        except (RuntimeError, TimeoutError):
+            restarts += 1
+            if restarts > max_restarts:
+                raise
+            ckpt.wait()
+            last = latest_step(ckpt_dir)
+            if last is not None:
+                state = restore_checkpoint(ckpt_dir, last, state, shardings)
+                step = last
+            else:
+                step = 0
+    ckpt.wait()
+    return dict(state=state, restarts=restarts, steps_run=steps_run)

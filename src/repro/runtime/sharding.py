@@ -1,0 +1,128 @@
+"""Logical-axis → PartitionSpec resolution (MaxText-style rules).
+
+Every parameter / activation / cache leaf carries a tuple of *logical* axis
+names (models/common.P). Rules map logical names to (ordered) mesh-axis
+candidates. Resolution is left-to-right per tensor with two safeguards:
+
+  * divisibility — a mesh assignment is dropped (progressively, from the
+    left of the candidate tuple) until the dimension divides evenly;
+  * no-reuse — a mesh axis already consumed by an earlier dimension of the
+    same tensor is skipped.
+
+The no-reuse rule gives context-dependent sharding for free: the cache rules
+put ``cache_batch → (pod, data)`` before ``cache_seq → data``, so batched
+decode shards the cache over batch, while long-context decode (batch=1,
+indivisible) automatically falls through to sequence sharding — the SP
+layout — with no per-cell special-casing.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+# Ordered logical rules. Values are mesh-axis candidate tuples (sharded over
+# the product of the surviving axes).
+DEFAULT_RULES: Dict[str, Tuple[str, ...]] = {
+    # parameters
+    "layers": (),
+    "embed": ("data",),              # FSDP: params sharded over data, TP over model
+    "embed_nosplit": (),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": (),
+    "mlp": ("model",),
+    "mlp_in": (),
+    "vocab": ("model",),
+    "experts": ("model",),
+    "mla_latent": (),
+    "rope_dim": (),
+    "conv": (),
+    "conv_channels": ("model",),
+    "ssm_state": (),
+    "heads_nosplit": (),
+    "scalar": (),
+    # activations
+    "act_batch": ("pod", "data"),
+    "act_seq": ("data",),
+    "act_embed": (),
+    "act_img": (),
+    "act_vocab": ("model",),
+    # caches (ordering + no-reuse ⇒ batch-sharded OR sequence-sharded)
+    "cache_batch": ("pod", "data"),
+    "cache_seq": ("data",),
+    "cache_img": (),
+}
+
+
+import contextlib
+
+_ACTIVE_RULES: Dict[str, Tuple[str, ...]] = dict(DEFAULT_RULES)
+
+
+def active_rules() -> Dict[str, Tuple[str, ...]]:
+    return _ACTIVE_RULES
+
+
+@contextlib.contextmanager
+def rule_overrides(overrides: Optional[Dict] = None):
+    """Temporarily replace the process-wide rule set (hillclimb variants
+    plumb their sharding changes into in-model ``constrain`` calls here)."""
+    global _ACTIVE_RULES
+    prev = _ACTIVE_RULES
+    _ACTIVE_RULES = dict(DEFAULT_RULES, **(overrides or {}))
+    try:
+        yield _ACTIVE_RULES
+    finally:
+        _ACTIVE_RULES = prev
+
+
+def resolve_axis(name: str, dim: int, mesh: Mesh, used: set,
+                 rules: Dict[str, Tuple[str, ...]]):
+    """Mesh assignment for one tensor dimension (None / str / tuple)."""
+    cand = [a for a in rules.get(name, ())
+            if a in mesh.shape and a not in used]
+    while cand:
+        total = int(np.prod([mesh.shape[a] for a in cand]))
+        if dim % total == 0 and total > 1:
+            used.update(cand)
+            return tuple(cand) if len(cand) > 1 else cand[0]
+        cand = cand[1:]          # drop the leading (largest-scope) axis
+    return None
+
+
+def spec_for(axes: Sequence[str], shape: Sequence[int], mesh: Mesh,
+             rules: Optional[Dict] = None) -> PartitionSpec:
+    rules = rules or active_rules()
+    used: set = set()
+    assert len(axes) == len(shape), (axes, shape)
+    return PartitionSpec(*(resolve_axis(a, d, mesh, used, rules)
+                           for a, d in zip(axes, shape)))
+
+
+def tree_shardings(spec_tree, shape_tree, mesh: Mesh,
+                   rules: Optional[Dict] = None):
+    """NamedSharding tree from (logical-axes tree, ShapeDtypeStruct tree)."""
+    return jax.tree.map(
+        lambda axes, sds: NamedSharding(
+            mesh, spec_for(axes, sds.shape, mesh, rules)),
+        spec_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+
+
+def abstract_with_sharding(shape_tree, spec_tree, mesh: Mesh,
+                           rules: Optional[Dict] = None):
+    """ShapeDtypeStructs with NamedShardings attached (dry-run inputs)."""
+    sh = tree_shardings(spec_tree, shape_tree, mesh, rules)
+    return jax.tree.map(
+        lambda sds, s: jax.ShapeDtypeStruct(sds.shape, sds.dtype, sharding=s),
+        shape_tree, sh)
+
+
+def constraint(x, axes: Sequence[str], mesh: Mesh, rules=None):
+    """with_sharding_constraint by logical axes (hillclimb hook)."""
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec_for(axes, x.shape, mesh, rules)))

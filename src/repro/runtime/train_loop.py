@@ -1,0 +1,72 @@
+"""train_step / serve_step factories (the functions the dry-run lowers).
+
+``make_train_step`` builds the full production step: loss → grad (with remat
+per config) → optional microbatch accumulation → optional cross-pod gradient
+compression → AdamW update. All state (params + optimizer) stays sharded;
+buffers are donated.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import adamw as adamw_mod
+from repro.optim import compression
+
+
+def make_train_step(model, opt, *, grad_accum: int = 1,
+                    compress: Optional[str] = None):
+    """Returns train_step(params, opt_state, batch, step_key) →
+    (params, opt_state, metrics)."""
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(lambda p: model.loss(p, batch))(params)
+
+    def train_step(params, opt_state, batch, step_key):
+        if grad_accum > 1:
+            # Microbatch over the leading batch axis via scan (sequential
+            # accumulation — each microbatch's backprop overlaps the next
+            # microbatch's collectives under XLA pipelining).
+            def micro(c, mb):
+                acc_loss, acc_g = c
+                loss, g = grads_of(params, mb)
+                return (acc_loss + loss,
+                        jax.tree.map(jnp.add, acc_g, g)), None
+
+            mbs = jax.tree.map(
+                lambda x: x.reshape((grad_accum, x.shape[0] // grad_accum)
+                                    + x.shape[1:]), batch)
+            # Accumulators seeded from params (data dependence) so they
+            # inherit the FSDP sharding instead of being replicated.
+            zero = jax.tree.map(
+                lambda p: (p * 0).astype(jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(micro, (0.0, zero), mbs)
+            loss = loss / grad_accum
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+        else:
+            loss, grads = grads_of(params, batch)
+
+        if compress == "int8":
+            grads = compression.int8_roundtrip(grads, step_key)
+
+        params, opt_state, gnorm = opt.update(grads, opt_state, params)
+        return params, opt_state, dict(loss=loss, grad_norm=gnorm)
+
+    return train_step
+
+
+def make_prefill_step(model):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch)
+    return prefill_step
+
+
+def make_decode_step(model):
+    def decode_step(params, cache, tokens, pos):
+        logits, cache = model.decode(params, cache, tokens, pos)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return next_tok, logits, cache
+    return decode_step

@@ -1,0 +1,12 @@
+"""Discrete-event geo-distributed cluster simulator (paper §5-§6 testbed).
+
+The paper runs 175 AWS m5.metal nodes across five regions and replays Google
+Borg / Alibaba arrival processes over PARSEC/CloudSuite jobs. This package
+reproduces that testbed as a simulator: ``trace`` generates statistically
+matched arrival/duration/energy processes (real trace files can be loaded
+when available), ``cluster``/``engine`` run the event loop with any scheduler
+plugged in, and ``metrics`` computes the paper's figures of merit.
+"""
+from repro.sim.trace import borg_trace, alibaba_trace, BENCHMARK_PROFILES
+from repro.sim.engine import Simulator, SimConfig
+from repro.sim.metrics import summarize, savings_vs

@@ -1,0 +1,50 @@
+"""Region/cluster state: capacities, reservations, in-flight transfers."""
+from __future__ import annotations
+
+import heapq
+from typing import List
+
+import numpy as np
+
+
+class Cluster:
+    """Server bookkeeping for N regions.
+
+    A scheduled job holds one server from dispatch until completion (the
+    transfer window is included in the hold — a deliberate, conservative
+    simplification: the destination server is pinned once the move starts,
+    mirroring how checkpoint-restore targets are reserved in practice).
+    """
+
+    def __init__(self, capacity: np.ndarray):
+        self.capacity = np.asarray(capacity, dtype=np.int64)
+        self.busy = np.zeros_like(self.capacity)
+        self._completions: List = []      # heap of (finish_s, region)
+        self.busy_integral_s = 0.0        # server-seconds actually busy
+        self._last_t = 0.0
+
+    @property
+    def num_regions(self) -> int:
+        return len(self.capacity)
+
+    def free(self) -> np.ndarray:
+        return self.capacity - self.busy
+
+    def advance(self, now_s: float) -> int:
+        """Release servers whose jobs finished by ``now_s``."""
+        self.busy_integral_s += float(self.busy.sum()) * (now_s - self._last_t)
+        self._last_t = now_s
+        released = 0
+        while self._completions and self._completions[0][0] <= now_s:
+            _, region = heapq.heappop(self._completions)
+            self.busy[region] -= 1
+            released += 1
+        return released
+
+    def dispatch(self, region: int, finish_s: float) -> None:
+        assert self.busy[region] < self.capacity[region], "over-capacity"
+        self.busy[region] += 1
+        heapq.heappush(self._completions, (finish_s, region))
+
+    def utilization(self, horizon_s: float) -> float:
+        return self.busy_integral_s / (float(self.capacity.sum()) * horizon_s)

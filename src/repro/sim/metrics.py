@@ -1,0 +1,46 @@
+"""Figures of merit (paper §5): carbon/water totals & savings, service time,
+delay-tolerance violations, decision overhead."""
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+
+def summarize(result: Dict) -> Dict[str, float]:
+    recs = result["records"]
+    if not recs:
+        return dict(carbon_kg=0.0, water_kl=0.0, mean_service_ratio=1.0,
+                    violation_pct=0.0, jobs=0, mean_solve_ms=0.0,
+                    p99_service_ratio=1.0, moved_pct=0.0,
+                    utilization=result.get("utilization", 0.0))
+    carbon = sum(r.carbon_g for r in recs) / 1e3
+    water = sum(r.water_l for r in recs) / 1e3
+    ratios = np.array([r.service_ratio for r in recs])
+    viol = np.mean([r.violated for r in recs]) * 100.0
+    moved = np.mean([r.region != r.job.home_region for r in recs]) * 100.0
+    st = result["solve_times"]
+    return dict(carbon_kg=float(carbon), water_kl=float(water),
+                mean_service_ratio=float(ratios.mean()),
+                p99_service_ratio=float(np.percentile(ratios, 99)),
+                violation_pct=float(viol), jobs=len(recs),
+                mean_solve_ms=float(st.mean() * 1e3) if st.size else 0.0,
+                moved_pct=float(moved),
+                utilization=float(result.get("utilization", 0.0)))
+
+
+def savings_vs(baseline: Dict[str, float], other: Dict[str, float]) -> Dict:
+    """% carbon/water savings of ``other`` relative to ``baseline``
+    (positive = better, the paper's primary metric)."""
+    def pct(key):
+        b = baseline[key]
+        return 100.0 * (b - other[key]) / b if b else 0.0
+    return dict(carbon_savings_pct=pct("carbon_kg"),
+                water_savings_pct=pct("water_kl"))
+
+
+def region_distribution(result: Dict, num_regions: int) -> np.ndarray:
+    """Fig 3(b): % of jobs executed per region."""
+    recs = result["records"]
+    counts = np.bincount([r.region for r in recs], minlength=num_regions)
+    return 100.0 * counts / max(len(recs), 1)

@@ -1,0 +1,57 @@
+"""Unit + property tests for the paper's footprint equations (Eqs 1-6)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import footprint as fp
+
+pos = st.floats(min_value=1e-3, max_value=1e3, allow_nan=False)
+
+
+def test_eq1_carbon_components():
+    # 2 kWh at 100 g/kWh + half-lifetime amortization of 1000 g.
+    assert fp.operational_carbon(2.0, 100.0) == 200.0
+    assert fp.embodied_carbon(50.0, 100.0, 1000.0) == 500.0
+    assert fp.total_carbon(2.0, 100.0, 50.0, 100.0, 1000.0) == 700.0
+
+
+def test_eq2_eq3_water_scaling_by_wsf():
+    base = fp.offsite_water(1.0, 1.2, 10.0, 0.0)
+    stressed = fp.offsite_water(1.0, 1.2, 10.0, 1.0)
+    assert stressed == pytest.approx(2 * base)          # (1+WSF) scaling
+    assert fp.onsite_water(2.0, 3.0, 0.0) == 6.0
+
+
+def test_eq6_water_intensity_consistency():
+    """Eq 6 must equal the per-kWh operational water of Eqs 2+3."""
+    pue, ewif, wue, wsf = 1.2, 8.0, 2.5, 0.4
+    wi = fp.water_intensity(wue, pue, ewif, wsf)
+    per_kwh = (fp.offsite_water(1.0, pue, ewif, wsf)
+               + fp.onsite_water(1.0, wue, wsf))
+    assert wi == pytest.approx(per_kwh)
+
+
+def test_embodied_water_derivation():
+    """Eq 4 back-out: embodied carbon / CI_mfg × EWIF × (1+WSF)."""
+    s = fp.ServerSpec(embodied_gco2=550_000.0, ci_mfg_g_per_kwh=550.0,
+                      ewif_mfg_l_per_kwh=2.0, wsf_mfg=0.5)
+    assert s.manufacturing_energy_kwh == pytest.approx(1000.0)
+    assert s.embodied_water_l == pytest.approx(1000.0 * 2.0 * 1.5)
+
+
+@settings(max_examples=100, deadline=None)
+@given(e=pos, ci=pos, t=pos, life=pos, emb=pos)
+def test_carbon_monotone_in_energy_and_ci(e, ci, t, life, emb):
+    c1 = fp.total_carbon(e, ci, t, life, emb)
+    assert fp.total_carbon(2 * e, ci, t, life, emb) > c1
+    assert fp.total_carbon(e, 2 * ci, t, life, emb) > c1
+
+
+@settings(max_examples=100, deadline=None)
+@given(e=pos, pue=st.floats(1.0, 3.0), ewif=pos, wue=pos,
+       wsf=st.floats(0, 2))
+def test_water_linear_in_energy(e, pue, ewif, wue, wsf):
+    w1 = fp.offsite_water(e, pue, ewif, wsf) + fp.onsite_water(e, wue, wsf)
+    w2 = fp.offsite_water(2 * e, pue, ewif, wsf) + fp.onsite_water(2 * e, wue,
+                                                                   wsf)
+    assert w2 == pytest.approx(2 * w1, rel=1e-9)

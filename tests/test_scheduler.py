@@ -1,0 +1,110 @@
+"""Controller (Algorithm 1), slack manager (Eq 14), history learner, and
+telemetry calibration tests."""
+import numpy as np
+import pytest
+
+from repro.core import slack, telemetry
+from repro.core.controller import Controller
+from repro.core.problem import Job
+
+
+@pytest.fixture(scope="module")
+def tele():
+    return telemetry.generate(days=2, seed=0)
+
+
+def _jobs(n, tol=0.5, t=600.0, submit=0.0):
+    return [Job(job_id=i, home_region=i % 5, submit_time_s=submit,
+                exec_time_s=t, energy_kwh=0.05, tolerance=tol)
+            for i in range(n)]
+
+
+def test_urgency_decreases_with_waiting(tele):
+    jobs = _jobs(1)
+    u0 = slack.urgency(jobs, now_s=0.0)[0]
+    u1 = slack.urgency(jobs, now_s=100.0)[0]
+    assert u1 == pytest.approx(u0 - 100.0)
+
+
+def test_slack_manager_picks_most_urgent(tele):
+    a = Job(0, 0, 0.0, 100.0, 0.01, tolerance=0.25)   # little slack
+    b = Job(1, 0, 0.0, 10_000.0, 0.01, tolerance=1.0)  # lots of slack
+    chosen, deferred = slack.pick_most_urgent([b, a], 0.0, 1)
+    assert chosen == [a] and deferred == [b]
+
+
+def test_controller_respects_capacity(tele):
+    ctl = Controller(tele)
+    jobs = _jobs(10)
+    cap = np.array([1, 1, 1, 1, 1])                    # only 5 slots
+    dec = ctl.schedule(jobs, 0.0, cap)
+    assert len(dec.scheduled) == 5
+    assert len(dec.deferred) == 5
+    counts = np.bincount(dec.assign, minlength=5)
+    assert (counts <= cap).all()
+
+
+def test_controller_soft_fallback_on_infeasible(tele):
+    """Jobs whose tolerance cannot admit any remote arc AND whose home is
+    full must still be placed via the soft path (Algorithm 1 lines 10-11)."""
+    ctl = Controller(tele)
+    # 3 jobs, all home=0, capacity 1 at home; zero tolerance forbids moves.
+    jobs = [Job(i, 0, 0.0, 60.0, 0.01, tolerance=0.0) for i in range(3)]
+    cap = np.array([1, 3, 3, 3, 3])
+    dec = ctl.schedule(jobs, 0.0, cap)
+    assert dec.softened
+    assert len(dec.scheduled) == 3                     # all placed anyway
+    assert (dec.solver.penalties >= 0).all()
+
+
+def test_weights_shift_decisions(tele):
+    """λ_CO2=1 should (weakly) beat λ_H2O=1 on carbon and vice versa."""
+    jobs_a, jobs_b = _jobs(40), _jobs(40)
+    cap = np.array([20] * 5)
+    snap = tele.at(0.0)
+    carbon_ctl = Controller(tele, lam_co2=1.0, lam_h2o=0.0)
+    water_ctl = Controller(tele, lam_co2=0.0, lam_h2o=1.0)
+    da = carbon_ctl.schedule(jobs_a, 0.0, cap.copy())
+    db = water_ctl.schedule(jobs_b, 0.0, cap.copy())
+    ci = snap["ci"]
+    wi = snap["water_intensity"]
+    assert ci[da.assign].mean() <= ci[db.assign].mean() + 1e-9
+    assert wi[db.assign].mean() <= wi[da.assign].mean() + 1e-9
+
+
+def test_history_learner_window(tele):
+    ctl = Controller(tele, window=3)
+    for h in range(5):
+        ctl.history.observe(tele.at(h * 3600.0))
+    assert len(ctl.history.ci) == 3
+    assert ctl.history.co2_ref.shape == (5,)
+
+
+# -- telemetry calibration (paper Fig 1 / Fig 2) ---------------------------
+
+def test_fig1_source_constants():
+    assert telemetry.SOURCE_CI["coal"] / telemetry.SOURCE_CI["hydro"] > 60
+    assert (telemetry.EWIF_MACKNICK["hydro"]
+            / telemetry.EWIF_MACKNICK["coal"]) > 10
+
+
+def test_fig2_regional_structure(tele):
+    ci_mean = tele.ci.mean(axis=0)
+    ewif_mean = tele.ewif.mean(axis=0)
+    zurich = telemetry.REGION_INDEX["Zurich"]
+    mumbai = telemetry.REGION_INDEX["Mumbai"]
+    assert ci_mean[zurich] == ci_mean.min()        # lowest carbon intensity
+    assert ci_mean[mumbai] == ci_mean.max()        # highest carbon intensity
+    assert ewif_mean[zurich] == ewif_mean.max()    # most water-thirsty grid
+    # temporal variation exists (Fig 2e)
+    assert (tele.ci.std(axis=0) > 1.0).all()
+    # carbon-water tension: CI and water intensity not positively aligned
+    wi_mean = tele.water_intensity.mean(axis=0)
+    assert np.corrcoef(ci_mean, wi_mean)[0, 1] < 0.5
+
+
+def test_transfer_latency_properties():
+    lat = telemetry.transfer_latency_s(2e9, 0, 1)
+    assert lat > telemetry.transfer_latency_s(2e9, 0, 0) == 0.0
+    assert (telemetry.transfer_latency_s(4e9, 0, 1)
+            > telemetry.transfer_latency_s(2e9, 0, 1))

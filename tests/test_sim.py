@@ -1,0 +1,89 @@
+"""End-to-end simulator behaviour: the paper's §6 claims in miniature."""
+import copy
+
+import numpy as np
+import pytest
+
+from repro.core import telemetry
+from repro.core.baselines import make_scheduler
+from repro.sim import Simulator, borg_trace, savings_vs, summarize
+from repro.sim.trace import alibaba_trace, scale_capacity_for_utilization
+
+
+@pytest.fixture(scope="module")
+def setup():
+    tele = telemetry.generate(days=1, seed=0)
+    jobs = borg_trace(days=0.15, seed=0, tolerance=0.5)
+    cap = scale_capacity_for_utilization(jobs, 0.15, 5, utilization=0.15)
+    return tele, jobs, cap
+
+
+def _run(setup, name, **kw):
+    tele, jobs, cap = setup
+    sched = make_scheduler(name, tele, **kw)
+    return summarize(Simulator(tele, cap).run(copy.deepcopy(jobs), sched))
+
+
+def test_baseline_stays_home(setup):
+    s = _run(setup, "baseline")
+    assert s["moved_pct"] == 0.0
+    assert s["violation_pct"] == 0.0
+
+
+def test_waterwise_saves_both_metrics(setup):
+    base = _run(setup, "baseline")
+    ww = _run(setup, "waterwise")
+    sv = savings_vs(base, ww)
+    assert sv["carbon_savings_pct"] > 5.0
+    assert sv["water_savings_pct"] > 5.0
+    assert ww["violation_pct"] < 3.0               # paper Table 2 regime
+    assert ww["mean_service_ratio"] < 1.5
+
+
+def test_carbon_water_tension(setup):
+    """Paper Observation 3: each greedy oracle wins its own metric but is
+    suboptimal on the other; WaterWise sits between."""
+    base = _run(setup, "baseline")
+    cg = _run(setup, "carbon-greedy-opt")
+    wg = _run(setup, "water-greedy-opt")
+    ww = _run(setup, "waterwise")
+    assert cg["carbon_kg"] < ww["carbon_kg"] < wg["carbon_kg"]
+    assert wg["water_kl"] < ww["water_kl"] < cg["water_kl"]
+
+
+def test_load_balancers_are_unaware(setup):
+    """Round-Robin / Least-Load must not beat WaterWise on either metric."""
+    ww = _run(setup, "waterwise")
+    for name in ("round-robin", "least-load"):
+        s = _run(setup, name)
+        assert ww["carbon_kg"] < s["carbon_kg"]
+        assert ww["water_kl"] < s["water_kl"]
+
+
+def test_delay_tolerance_monotonicity():
+    """Higher TOL% → (weakly) more savings (paper Fig 5)."""
+    tele = telemetry.generate(days=1, seed=0)
+    outs = {}
+    for tol in (0.25, 1.0):
+        jobs = borg_trace(days=0.1, seed=0, tolerance=tol)
+        cap = scale_capacity_for_utilization(jobs, 0.1, 5, utilization=0.15)
+        base = summarize(Simulator(tele, cap).run(
+            copy.deepcopy(jobs), make_scheduler("baseline", tele)))
+        ww = summarize(Simulator(tele, cap).run(
+            copy.deepcopy(jobs), make_scheduler("waterwise", tele)))
+        outs[tol] = savings_vs(base, ww)
+    assert (outs[1.0]["carbon_savings_pct"]
+            >= outs[0.25]["carbon_savings_pct"] - 1.0)
+
+
+def test_alibaba_trace_rate():
+    borg = borg_trace(days=0.1, seed=0)
+    ali = alibaba_trace(days=0.1, seed=0)
+    assert len(ali) > 5 * len(borg)                  # ~8.5× invocation rate
+
+
+def test_simulator_determinism(setup):
+    a = _run(setup, "waterwise")
+    b = _run(setup, "waterwise")
+    assert a["carbon_kg"] == b["carbon_kg"]
+    assert a["jobs"] == b["jobs"]
