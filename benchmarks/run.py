@@ -3,18 +3,74 @@
   PYTHONPATH=src python -m benchmarks.run            # quick (~minutes)
   PYTHONPATH=src python -m benchmarks.run --full     # paper-scale traces
   PYTHONPATH=src python -m benchmarks.run --only fig5,table2
+
+Scenario sweep (event-driven engine, schedulers × scenarios cross product):
+
+  PYTHONPATH=src python -m benchmarks.run --sweep            # quick
+  PYTHONPATH=src python -m benchmarks.run --sweep --full     # 100k jobs/10d
 """
 from __future__ import annotations
 
 import argparse
+import os
 import time
+
+
+def run_sweep(args) -> None:
+    from repro.sim import scenarios
+
+    full = args.full
+    days = args.days if args.days is not None else (10.0 if full else 0.2)
+    jobs_per_day = (args.jobs_per_day if args.jobs_per_day is not None
+                    else (10000.0 if full else 23000.0))
+    schedulers = args.schedulers.split(",")
+    names = (args.scenarios.split(",") if args.scenarios
+             else scenarios.list_scenarios())
+    t0 = time.time()
+    rows = scenarios.sweep(schedulers, names, days=days,
+                           jobs_per_day=jobs_per_day, seed=args.seed,
+                           max_workers=args.workers)
+    print(scenarios.to_table(rows))
+    out = os.path.join(os.path.dirname(__file__), "out")
+    os.makedirs(out, exist_ok=True)
+    csv = os.path.join(out, "scenario_sweep.csv")
+    scenarios.to_csv(rows, csv)
+    total = sum(r["jobs"] for r in rows)
+    print(f"\n# sweep: {len(rows)} cells, {total} job-placements, "
+          f"{time.time() - t0:.1f}s wall -> {csv}")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default="")
+    ap.add_argument("--sweep", action="store_true",
+                    help="run the scenario sweep instead of the paper figures")
+    ap.add_argument("--scenarios", default="",
+                    help="comma-separated scenario names (default: all)")
+    ap.add_argument("--schedulers",
+                    default="baseline,least-load,ecovisor,waterwise")
+    ap.add_argument("--days", type=float, default=None)
+    ap.add_argument("--jobs-per-day", type=float, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--workers", type=int, default=None)
     args = ap.parse_args()
+
+    if args.sweep:
+        if args.only:
+            ap.error("--only does not apply with --sweep "
+                     "(use --scenarios/--schedulers to filter)")
+        run_sweep(args)
+        return
+    sweep_only = dict(scenarios=args.scenarios != "", days=args.days is not None,
+                      jobs_per_day=args.jobs_per_day is not None,
+                      seed=args.seed != 0, workers=args.workers is not None,
+                      schedulers=args.schedulers
+                      != ap.get_default("schedulers"))
+    if any(sweep_only.values()):
+        ap.error("--" + ", --".join(k.replace("_", "-")
+                                    for k, v in sweep_only.items() if v)
+                 + " only apply with --sweep")
 
     from benchmarks import figures
     from benchmarks.common import FULL_DAYS, QUICK_DAYS

@@ -1,0 +1,29 @@
+"""Scenario sweep in ~20 lines: schedulers × environmental regimes.
+
+Runs a small Borg-like trace through three schedulers under three regimes —
+nominal, a drought summer (elevated WUE + scarcity), and a full outage of
+the greenest region — on the event-driven engine, then prints the tidy
+results table. The full registry (``scenarios.list_scenarios()``) and
+paper-scale traces are driven the same way:
+
+  PYTHONPATH=src python examples/scenario_sweep.py
+  PYTHONPATH=src python -m benchmarks.run --sweep --full   # 100k jobs, 10d
+"""
+from repro.sim import scenarios
+
+SCHEDULERS = ["baseline", "least-load", "waterwise"]
+SCENARIOS = ["nominal", "drought-summer", "capacity-loss"]
+
+
+def main() -> None:
+    rows = scenarios.sweep(SCHEDULERS, SCENARIOS, days=0.1, seed=0)
+    print(scenarios.to_table(rows))
+    ww = {r["scenario"]: r for r in rows if r["scheduler"] == "waterwise"}
+    for name, row in ww.items():
+        print(f"waterwise under {name}: {row['carbon_savings_pct']:.1f}% "
+              f"carbon, {row['water_savings_pct']:.1f}% water saved "
+              f"vs baseline")
+
+
+if __name__ == "__main__":
+    main()

@@ -44,16 +44,23 @@ class HistoryLearner:
         self.ci = collections.deque(maxlen=window)
         self.wi = collections.deque(maxlen=window)
         # "Typical conditions" need a longer horizon than the Eq-8 ref term:
-        # 240 rounds ≈ 2 h at the default 30 s scheduling period.
-        self.raw = collections.deque(maxlen=raw_window)
+        # 240 rounds ≈ 2 h at the default 30 s scheduling period. Stored as a
+        # ring buffer ([raw_window, 3, R]) — the per-round mean is one
+        # vectorized reduction instead of rebuilding arrays from a deque of
+        # dicts (this is on the simulator's per-round hot path).
+        self.raw_window = raw_window
+        self._raw = np.zeros((raw_window, 3, num_regions))
+        self._raw_n = 0          # total observations so far
         self.num_regions = num_regions
 
     def observe(self, snap) -> None:
         ci, wi = snap["ci"], snap["water_intensity"]
         self.ci.append(ci / max(ci.max(), 1e-9))
         self.wi.append(wi / max(wi.max(), 1e-9))
-        self.raw.append(dict(ci=ci.copy(), ewif=snap["ewif"].copy(),
-                             wue=snap["wue"].copy()))
+        self._raw[self._raw_n % self.raw_window, 0] = ci
+        self._raw[self._raw_n % self.raw_window, 1] = snap["ewif"]
+        self._raw[self._raw_n % self.raw_window, 2] = snap["wue"]
+        self._raw_n += 1
 
     @property
     def co2_ref(self) -> Optional[np.ndarray]:
@@ -64,10 +71,10 @@ class HistoryLearner:
         return np.mean(self.wi, axis=0) if self.wi else None
 
     def mean_raw(self) -> Optional[dict]:
-        if len(self.raw) < 2:
+        if self._raw_n < 2:
             return None
-        return {k: np.mean([r[k] for r in self.raw], axis=0)
-                for k in ("ci", "ewif", "wue")}
+        m = self._raw[:min(self._raw_n, self.raw_window)].mean(axis=0)
+        return dict(ci=m[0], ewif=m[1], wue=m[2])
 
 
 class Controller:
@@ -108,8 +115,9 @@ class Controller:
         if not jobs:
             return Decision([], np.zeros(0, np.int64), deferred, None, False)
 
-        inst = problem.build(jobs, self.tele, now_s, capacity, self.server)
         snap = self.tele.at(now_s)
+        inst = problem.build(jobs, self.tele, now_s, capacity, self.server,
+                             snap=snap)
         self.history.observe(snap)
         cost = inst.objective_matrix(self.lam_co2, self.lam_h2o, self.lam_ref,
                                      self.history.co2_ref,

@@ -87,14 +87,17 @@ class ProblemInstance:
 
 def build(jobs: Sequence[Job], tele: telemetry.Telemetry, now_s: float,
           capacity: np.ndarray, server: footprint.ServerSpec,
-          bw_gbps: Optional[np.ndarray] = None) -> ProblemInstance:
+          bw_gbps: Optional[np.ndarray] = None,
+          snap: Optional[dict] = None) -> ProblemInstance:
     """Construct the cost matrices for ``jobs`` at decision time ``now_s``.
 
     The scheduler sees only *current* intensities (paper §4: "the scheduler
     cannot have futuristic information") — footprints are priced at time
-    ``now_s`` even though execution extends beyond it.
+    ``now_s`` even though execution extends beyond it. Callers that already
+    hold the ``tele.at(now_s)`` snapshot may pass it to avoid recomputing.
     """
-    snap = tele.at(now_s)
+    if snap is None:
+        snap = tele.at(now_s)
     M, N = len(jobs), tele.num_regions
 
     E = np.array([j.energy_kwh for j in jobs])          # [M]

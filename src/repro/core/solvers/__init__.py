@@ -102,3 +102,28 @@ def solve(cost: np.ndarray, allowed: np.ndarray, capacity: np.ndarray,
               np.asarray(capacity), soften=soften,
               overrun=None if overrun is None else np.asarray(overrun),
               tol=None if tol is None else np.asarray(tol), sigma=sigma)
+
+
+def solve_many(costs, alloweds, capacities, *, backend: str = "jax",
+               soften: bool = False, overruns=None, tols=None,
+               sigma: float = 10.0) -> list:
+    """Solve K independent instances; returns SolveResults in input order.
+
+    The ``jax`` backend buckets instances by padded shape and runs each
+    bucket's Sinkhorn as one vmapped device dispatch (see
+    ``jax_solver.solve_many``) — the amortized path for queued scheduling
+    windows. Every other backend falls back to a per-instance loop.
+    """
+    get_solver(backend)  # trigger registration / validate name
+    if backend == "jax":
+        from repro.core.solvers import jax_solver
+        return jax_solver.solve_many(costs, alloweds, capacities,
+                                     soften=soften, overruns=overruns,
+                                     tols=tols, sigma=sigma)
+    K = len(costs)
+    overruns = overruns if overruns is not None else [None] * K
+    tols = tols if tols is not None else [None] * K
+    return [solve(costs[k], alloweds[k], capacities[k], backend=backend,
+                  soften=soften, overrun=overruns[k], tol=tols[k],
+                  sigma=sigma)
+            for k in range(K)]

@@ -23,6 +23,7 @@ the TPU-native equivalent of the paper's branch-and-cut (DESIGN.md §4).
 from __future__ import annotations
 
 import functools
+import time
 from typing import Optional
 
 import jax
@@ -32,18 +33,35 @@ import numpy as np
 from repro.core import solvers
 
 BIG = 1e4          # forbidden-arc cost after normalization to ~unit scale
-_NEG = -1e9        # log-domain mask value
+_NEG = -1e9        # log-domain mask value / zero-mass row marginal
+
+# Row-count buckets: cost matrices are padded up to the next bucket (with
+# zero-mass rows) before hitting the jitted Sinkhorn, so a whole simulation
+# run — thousands of scheduling rounds with jittery window sizes — compiles
+# the solver once per bucket instead of once per distinct M.
+BUCKETS = (4, 8, 16, 32, 64, 128, 256, 512, 1024, 2048, 4096)
 
 
-@functools.partial(jax.jit, static_argnames=("iters", "anneal_stages"))
-def sinkhorn_log(C: jnp.ndarray, log_a: jnp.ndarray, log_b: jnp.ndarray,
-                 eps0: float = 0.5, eps_min: float = 0.01,
-                 iters: int = 60, anneal_stages: int = 6):
+def bucket_for(rows: int) -> int:
+    """Smallest bucket ≥ rows (next power of two beyond the table)."""
+    for b in BUCKETS:
+        if rows <= b:
+            return b
+    b = BUCKETS[-1]
+    while b < rows:
+        b *= 2
+    return b
+
+
+def _sinkhorn_log_impl(C: jnp.ndarray, log_a: jnp.ndarray, log_b: jnp.ndarray,
+                       eps0: float = 0.5, eps_min: float = 0.01,
+                       iters: int = 60, anneal_stages: int = 6):
     """Log-stabilized Sinkhorn with geometric ε-annealing.
 
     Args:
       C: [M, N] cost (forbidden arcs already priced at BIG).
-      log_a: [M] log row marginals; log_b: [N] log col marginals.
+      log_a: [M] log row marginals; log_b: [N] log col marginals. Rows with
+        log_a ≈ _NEG carry no mass — padding rows are exact no-ops.
     Returns:
       (f, g, eps): dual potentials and the final ε. The primal plan is
       X = exp((f[:,None] + g[None,:] − C) / ε).
@@ -75,6 +93,27 @@ def sinkhorn_log(C: jnp.ndarray, log_a: jnp.ndarray, log_b: jnp.ndarray,
     g0 = jnp.zeros_like(log_b)
     (f, g), _ = jax.lax.scan(stage, (f0, g0), eps_sched)
     return f, g, eps_sched[-1]
+
+
+# Single-instance and window-batched entry points. The batched variant vmaps
+# over a stack of same-bucket instances (queued scheduling windows solved in
+# one device dispatch); both share one implementation and therefore one
+# compile cache keyed on (bucket, N, iters, stages).
+sinkhorn_log = functools.partial(jax.jit, static_argnames=(
+    "iters", "anneal_stages"))(_sinkhorn_log_impl)
+
+
+def _sinkhorn_batched_impl(C, log_a, log_b, eps0: float = 0.5,
+                           eps_min: float = 0.01, iters: int = 60,
+                           anneal_stages: int = 6):
+    def one(c, la, lb):
+        return _sinkhorn_log_impl(c, la, lb, eps0, eps_min, iters,
+                                  anneal_stages)
+    return jax.vmap(one)(C, log_a, log_b)
+
+
+sinkhorn_log_batched = functools.partial(jax.jit, static_argnames=(
+    "iters", "anneal_stages"))(_sinkhorn_batched_impl)
 
 
 @jax.jit
@@ -152,58 +191,138 @@ def _improve_2swap(assign: np.ndarray, cost: np.ndarray, mask: np.ndarray,
     return assign
 
 
+def _effective(cost, allowed, soften, overrun, tol, sigma):
+    if soften:
+        assert overrun is not None and tol is not None
+        c_eff = solvers.soft_cost(cost, allowed, overrun, tol, sigma)
+        mask = np.ones_like(allowed, dtype=bool)
+    else:
+        c_eff = cost.astype(np.float64)
+        mask = allowed.astype(bool)
+    return c_eff, mask
+
+
+def _infeasible(M):
+    return solvers.SolveResult(assign=np.full(M, -1), objective=float("inf"),
+                               status="infeasible", solve_time_s=0.0,
+                               penalties=np.zeros(M), backend="jax")
+
+
+def _prepare(c_eff, mask, cap, pad_rows: int):
+    """Padded OT inputs: [M real rows | dummy slack row | pad_rows zero-mass
+    rows]. Zero-mass rows (log marginal = _NEG) are exact no-ops in the
+    log-domain updates, so padding changes nothing but the compiled shape."""
+    M, N = c_eff.shape
+    # Normalize costs to ~unit scale so ε has a universal meaning.
+    scale = max(float(np.abs(c_eff[mask]).max()), 1e-9)
+    Cn = np.where(mask, c_eff / scale, BIG)
+    slack = int(cap.sum()) - M
+    # Dummy row absorbs spare capacity (zero cost everywhere).
+    C = np.vstack([Cn, np.zeros((1 + pad_rows, N))]).astype(np.float32)
+    a = np.concatenate([np.ones(M), [max(slack, 1e-9)]])
+    total = a.sum()
+    log_a = np.concatenate([np.log(a / total),
+                            np.full(pad_rows, _NEG)]).astype(np.float32)
+    log_b = np.log(np.maximum(cap.astype(np.float64), 1e-12)
+                   / total).astype(np.float32)
+    return C, log_a, log_b, Cn
+
+
+def _finalize(X, Cn, c_eff, mask, cap, soften, overrun, tol):
+    """Round the (real-row) plan to an integral vertex + polish + price."""
+    M = Cn.shape[0]
+    X = X / np.maximum(X.sum(axis=1, keepdims=True), 1e-30)
+    assign = _round_to_vertex(X, Cn, mask, cap)
+    if (assign < 0).any():
+        # Greedy rounding stranded a job (capacity-tight instance): repair
+        # with the exact successive-shortest-path solver on the same
+        # normalized costs. Only genuinely infeasible instances survive this.
+        from repro.core.solvers import flow_solver
+        assign = flow_solver._ssp_assign(Cn, mask, cap)
+    if (assign >= 0).all():
+        assign = _improve_2swap(assign, Cn, mask, cap)
+    penalties = np.zeros(M)
+    if (assign < 0).any():
+        return solvers.SolveResult(assign=assign, objective=float("inf"),
+                                   status="infeasible", solve_time_s=0.0,
+                                   penalties=penalties, backend="jax")
+    obj = float(c_eff[np.arange(M), assign].sum())
+    if soften:
+        excess = np.maximum(overrun - tol[:, None], 0.0)
+        penalties = excess[np.arange(M), assign]
+    return solvers.SolveResult(assign=assign, objective=obj,
+                               status="rounded", solve_time_s=0.0,
+                               penalties=penalties, backend="jax")
+
+
 @solvers.register("jax")
 def solve(cost: np.ndarray, allowed: np.ndarray, capacity: np.ndarray, *,
           soften: bool = False, overrun: Optional[np.ndarray] = None,
           tol: Optional[np.ndarray] = None, sigma: float = 10.0,
-          eps_min: float = 0.005) -> solvers.SolveResult:
+          eps_min: float = 0.005,
+          pad_to_bucket: bool = True) -> solvers.SolveResult:
     def run() -> solvers.SolveResult:
         M, N = cost.shape
-        if soften:
-            assert overrun is not None and tol is not None
-            c_eff = solvers.soft_cost(cost, allowed, overrun, tol, sigma)
-            mask = np.ones_like(allowed, dtype=bool)
-        else:
-            c_eff = cost.astype(np.float64)
-            mask = allowed.astype(bool)
-
+        c_eff, mask = _effective(cost, allowed, soften, overrun, tol, sigma)
         cap = capacity.astype(np.int64)
-        slack = int(cap.sum()) - M
-        if slack < 0 or not mask.any(axis=1).all():
-            return solvers.SolveResult(
-                assign=np.full(M, -1), objective=float("inf"),
-                status="infeasible", solve_time_s=0.0,
-                penalties=np.zeros(M), backend="jax")
-
-        # Normalize costs to ~unit scale so ε has a universal meaning.
-        scale = max(float(np.abs(c_eff[mask]).max()), 1e-9)
-        Cn = np.where(mask, c_eff / scale, BIG)
-        # Dummy row absorbs spare capacity (zero cost everywhere).
-        C = np.vstack([Cn, np.zeros((1, N))]).astype(np.float32)
-        a = np.concatenate([np.ones(M), [max(slack, 1e-9)]])
-        b = cap.astype(np.float64)
-        log_a = np.log(a / a.sum())
-        log_b = np.log(np.maximum(b, 1e-12) / a.sum())
-
-        f, g, eps = sinkhorn_log(jnp.asarray(C), jnp.asarray(log_a, jnp.float32),
-                                 jnp.asarray(log_b, jnp.float32),
-                                 eps_min=eps_min)
+        if int(cap.sum()) < M or not mask.any(axis=1).all():
+            return _infeasible(M)
+        rows = M + 1
+        pad = (bucket_for(rows) - rows) if pad_to_bucket else 0
+        C, log_a, log_b, Cn = _prepare(c_eff, mask, cap, pad)
+        f, g, eps = sinkhorn_log(jnp.asarray(C), jnp.asarray(log_a),
+                                 jnp.asarray(log_b), eps_min=eps_min)
         X = np.asarray(plan_from_duals(jnp.asarray(C), f, g, eps))[:M]
-        X = X / np.maximum(X.sum(axis=1, keepdims=True), 1e-30)
-
-        assign = _round_to_vertex(X, Cn, mask, cap)
-        if (assign >= 0).all():
-            assign = _improve_2swap(assign, Cn, mask, cap)
-        penalties = np.zeros(M)
-        if (assign < 0).any():
-            return solvers.SolveResult(assign=assign, objective=float("inf"),
-                                       status="infeasible", solve_time_s=0.0,
-                                       penalties=penalties, backend="jax")
-        obj = float(c_eff[np.arange(M), assign].sum())
-        if soften:
-            excess = np.maximum(overrun - tol[:, None], 0.0)
-            penalties = excess[np.arange(M), assign]
-        return solvers.SolveResult(assign=assign, objective=obj,
-                                   status="rounded", solve_time_s=0.0,
-                                   penalties=penalties, backend="jax")
+        return _finalize(X, Cn, c_eff, mask, cap, soften, overrun, tol)
     return solvers._timed(run)
+
+
+def solve_many(costs, alloweds, capacities, *, soften: bool = False,
+               overruns=None, tols=None, sigma: float = 10.0,
+               eps_min: float = 0.005):
+    """Batched entry point: solve K instances, vmapping the Sinkhorn loop
+    over groups of same-bucket instances.
+
+    Queued scheduling windows (a scenario sweep's backlog, a replayed
+    multi-round trace, a Monte-Carlo ensemble) usually have jittery row
+    counts; bucketing pads them to a handful of compiled shapes and each
+    group runs as ONE device dispatch. Returns a list of SolveResults in
+    input order.
+    """
+    K = len(costs)
+    overruns = overruns if overruns is not None else [None] * K
+    tols = tols if tols is not None else [None] * K
+    results: list = [None] * K
+    groups: dict = {}
+    t0 = time.perf_counter()
+    for k in range(K):
+        cost = np.asarray(costs[k], np.float64)
+        allowed = np.asarray(alloweds[k], bool)
+        cap = np.asarray(capacities[k]).astype(np.int64)
+        M, N = cost.shape
+        c_eff, mask = _effective(cost, allowed, soften, overruns[k], tols[k],
+                                 sigma)
+        if int(cap.sum()) < M or not mask.any(axis=1).all():
+            results[k] = _infeasible(M)
+            continue
+        rows = M + 1
+        pad = bucket_for(rows) - rows
+        C, log_a, log_b, Cn = _prepare(c_eff, mask, cap, pad)
+        groups.setdefault((bucket_for(rows), N), []).append(
+            (k, C, log_a, log_b, Cn, c_eff, mask, cap))
+    for (_, _), items in groups.items():
+        Cb = jnp.asarray(np.stack([it[1] for it in items]))
+        la = jnp.asarray(np.stack([it[2] for it in items]))
+        lb = jnp.asarray(np.stack([it[3] for it in items]))
+        fb, gb, eps = sinkhorn_log_batched(Cb, la, lb, eps_min=eps_min)
+        plans = np.asarray(jnp.exp(
+            (fb[:, :, None] + gb[:, None, :] - Cb) / eps[:, None, None]))
+        for it, X in zip(items, plans):
+            k, _, _, _, Cn, c_eff, mask, cap = it
+            M = Cn.shape[0]
+            results[k] = _finalize(X[:M], Cn, c_eff, mask, cap, soften,
+                                   overruns[k], tols[k])
+    per = (time.perf_counter() - t0) / max(K, 1)
+    for r in results:
+        r.solve_time_s = per
+    return results

@@ -28,14 +28,44 @@ from repro.models.common import (P, apply_norm, embed_tokens, embedding_init,
 BIG_WINDOW = 1 << 30
 
 
+def _current_mesh():
+    """Version-compat mesh lookup.
+
+    ``jax.sharding.get_abstract_mesh`` landed after the pinned JAX release;
+    on older versions the mesh in effect is the thread-local physical mesh
+    pushed by ``with Mesh(...):`` (and, under the sharding-in-types mode,
+    the internal abstract mesh). Returns None when no mesh is active.
+    """
+    getter = getattr(jax.sharding, "get_abstract_mesh", None)
+    if getter is not None:
+        mesh = getter()
+        if mesh is not None and mesh.axis_names:
+            return mesh
+        # An empty abstract mesh does not rule out a `with Mesh(...)`
+        # context: fall through to the thread-local physical mesh.
+    try:
+        from jax._src import mesh as _mesh_internal
+        phys = _mesh_internal.thread_resources.env.physical_mesh
+        if phys is not None and phys.axis_names:
+            return phys
+        abstract_getter = getattr(_mesh_internal, "get_abstract_mesh", None)
+        if abstract_getter is not None:
+            mesh = abstract_getter()
+            if mesh is not None and getattr(mesh, "axis_names", ()):
+                return mesh
+    except Exception:
+        return None
+    return None
+
+
 def constrain(x, axes):
     """with_sharding_constraint by logical axes — no-op outside a mesh
     context (smoke tests), divisibility-aware inside one. This pins the
     activation layout at the embedding/logits boundary; SPMD propagation
     can otherwise pick a replicated layout for whole forward passes (it
     resolves ties arbitrarily — observed on MLA archs)."""
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh is None or not mesh.axis_names:
+    mesh = _current_mesh()
+    if mesh is None:
         return x
     from repro.runtime import sharding as shd
     spec = shd.spec_for(axes, x.shape, mesh)

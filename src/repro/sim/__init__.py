@@ -8,5 +8,6 @@ when available), ``cluster``/``engine`` run the event loop with any scheduler
 plugged in, and ``metrics`` computes the paper's figures of merit.
 """
 from repro.sim.trace import borg_trace, alibaba_trace, BENCHMARK_PROFILES
-from repro.sim.engine import Simulator, SimConfig
+from repro.sim.engine import (Simulator, EventSimulator, WindowedSimulator,
+                              SimConfig)
 from repro.sim.metrics import summarize, savings_vs

@@ -1,0 +1,322 @@
+"""Scenario registry + fleet-scale sweep runner.
+
+A *scenario* is a named, deterministic composition of
+
+  * a telemetry perturbation  (drought, grid decarbonization, …),
+  * a trace generator          (Borg-like steady, Alibaba-like bursty, …),
+  * a capacity profile         (static, or timed capacity events — outages),
+  * an accounting view         (e.g. Wu et al.-style water-stress weighting).
+
+The paper evaluates WaterWise under one telemetry regime; related work shows
+conclusions move with the regime (Attenni et al. sweep spatio-temporal
+shifting policies across regions/seasons; Wu et al. show water rankings flip
+under water-stress weighting). This module makes those regimes first-class:
+``sweep(schedulers, scenarios)`` runs the full cross product on the
+event-driven engine — optionally fanned out across worker processes — and
+returns one tidy row per (scenario, scheduler) cell.
+
+Adding a scenario::
+
+    @register("heatwave", "2-week heatwave: +8C wet-bulb everywhere")
+    def _heatwave(days, seed, jobs_per_day, utilization):
+        inst = _base(days, seed, jobs_per_day, utilization)
+        return dataclasses.replace(
+            inst, tele=scale_wue(inst.tele, 1.9), name="heatwave")
+
+The builder must be deterministic in its arguments (property-tested).
+"""
+from __future__ import annotations
+
+import concurrent.futures
+import dataclasses
+import os
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import telemetry
+from repro.core.problem import Job
+from repro.sim.engine import EventSimulator, SimConfig
+from repro.sim.metrics import savings_vs, summarize
+from repro.sim.trace import (DAY, alibaba_trace, borg_trace,
+                             scale_capacity_for_utilization)
+
+
+@dataclasses.dataclass
+class ScenarioInstance:
+    """Everything one simulation run needs, fully materialized."""
+    name: str
+    tele: telemetry.Telemetry
+    jobs: List[Job]
+    capacity: np.ndarray
+    capacity_events: List[Tuple[float, np.ndarray]] = \
+        dataclasses.field(default_factory=list)
+    # Per-region weights applied to each record's water footprint when
+    # reporting `stress_water_kl` (Wu et al.: liters in a water-stressed
+    # basin are not interchangeable with liters in a wet one). None = 1.
+    water_weight: Optional[np.ndarray] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    name: str
+    description: str
+    build: Callable[..., ScenarioInstance]
+
+
+_REGISTRY: Dict[str, Scenario] = {}
+
+
+def register(name: str, description: str):
+    """Decorator: register a scenario builder under ``name``."""
+    def deco(fn):
+        _REGISTRY[name] = Scenario(name=name, description=description,
+                                   build=fn)
+        return fn
+    return deco
+
+
+def get_scenario(name: str) -> Scenario:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown scenario {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def list_scenarios() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# Telemetry perturbations (pure: Telemetry -> new Telemetry)
+# ---------------------------------------------------------------------------
+
+def scale_wue(tele: telemetry.Telemetry, factor: float) -> telemetry.Telemetry:
+    return dataclasses.replace(tele, wue=tele.wue * factor)
+
+
+def raise_wsf(tele: telemetry.Telemetry, gain: float = 1.5,
+              floor: float = 0.1) -> telemetry.Telemetry:
+    return dataclasses.replace(
+        tele, wsf=np.minimum(tele.wsf * gain + floor, 1.0))
+
+
+def decarbonize(tele: telemetry.Telemetry, regions: Sequence[int],
+                onset_frac: float = 0.4, final_scale: float = 0.55,
+                horizon_hours: Optional[float] = None) -> telemetry.Telemetry:
+    """Grid-decarbonization event: carbon intensity in ``regions`` ramps
+    linearly from 1.0× down to ``final_scale``× starting at ``onset_frac``
+    of the *simulated* horizon (coal retirement / renewables buildout).
+
+    ``horizon_hours`` is the simulated span; telemetry is generated with
+    headroom beyond it (whole days + 1), so anchoring the ramp to the raw
+    array length would push the event past the end of short simulations.
+    Hours beyond the horizon hold at ``final_scale``."""
+    T = tele.num_hours
+    H = min(float(horizon_hours) if horizon_hours is not None else T, T)
+    onset = int(H * onset_frac)
+    end = min(int(np.ceil(H)), T)
+    ramp = np.ones(T)
+    if onset < end:
+        ramp[onset:end] = np.linspace(1.0, final_scale, end - onset)
+    ramp[end:] = final_scale
+    ci = tele.ci.copy()
+    for r in regions:
+        ci[:, r] = ci[:, r] * ramp
+    return dataclasses.replace(tele, ci=ci)
+
+
+# ---------------------------------------------------------------------------
+# Built-in scenarios
+# ---------------------------------------------------------------------------
+
+def _base(days: float, seed: int, jobs_per_day: float, utilization: float,
+          *, trace: str = "borg", tolerance: float = 0.5,
+          ewif_table: str = "macknick") -> ScenarioInstance:
+    tele = telemetry.generate(days=max(int(np.ceil(days)) + 1, 2), seed=seed,
+                              ewif_table=ewif_table)
+    if trace == "borg":
+        jobs = borg_trace(days=days, seed=seed, tolerance=tolerance,
+                          target_jobs_per_day=jobs_per_day)
+    else:
+        # Alibaba keeps its 8.5× burst shape; the multiplier rescales the
+        # absolute rate to the requested jobs/day.
+        mult = jobs_per_day / (8.5 * 23000.0)
+        jobs = alibaba_trace(days=days, seed=seed, tolerance=tolerance,
+                             rate_multiplier=mult)
+    cap = scale_capacity_for_utilization(jobs, days, tele.num_regions,
+                                         utilization)
+    return ScenarioInstance(name="nominal", tele=tele, jobs=jobs,
+                            capacity=cap)
+
+
+@register("nominal", "Borg-like steady trace, unperturbed telemetry")
+def _nominal(days, seed, jobs_per_day, utilization):
+    return _base(days, seed, jobs_per_day, utilization)
+
+
+@register("drought-summer",
+          "Heatwave + drought: cooling WUE +45%, scarcity factors elevated")
+def _drought(days, seed, jobs_per_day, utilization):
+    inst = _base(days, seed, jobs_per_day, utilization)
+    tele = raise_wsf(scale_wue(inst.tele, 1.45), gain=1.4, floor=0.1)
+    return dataclasses.replace(inst, name="drought-summer", tele=tele)
+
+
+@register("decarbonization",
+          "Grid-decarbonization event: dirtiest two grids ramp CI to 0.55x "
+          "from 40% of the horizon")
+def _decarb(days, seed, jobs_per_day, utilization):
+    inst = _base(days, seed, jobs_per_day, utilization)
+    dirty = list(np.argsort(inst.tele.ci.mean(axis=0))[-2:])
+    tele = decarbonize(inst.tele, dirty, horizon_hours=days * 24.0)
+    return dataclasses.replace(inst, name="decarbonization", tele=tele)
+
+
+@register("capacity-loss",
+          "Region outage: the greenest region loses all of its servers for "
+          "the middle ~15% of the horizon")
+def _outage(days, seed, jobs_per_day, utilization):
+    inst = _base(days, seed, jobs_per_day, utilization)
+    green = int(np.argmin(inst.tele.ci.mean(axis=0)))
+    degraded = inst.capacity.copy()
+    degraded[green] = 0
+    t0, t1 = 0.40 * days * DAY, 0.55 * days * DAY
+    events = [(t0, degraded), (t1, inst.capacity.copy())]
+    return dataclasses.replace(inst, name="capacity-loss",
+                               capacity_events=events)
+
+
+@register("burst-storm",
+          "Alibaba-style burst storm: bursty short-job trace at 25% target "
+          "utilization")
+def _burst(days, seed, jobs_per_day, utilization):
+    inst = _base(days, seed, jobs_per_day, max(utilization, 0.25),
+                 trace="alibaba")
+    return dataclasses.replace(inst, name="burst-storm")
+
+
+@register("water-stress-weighted",
+          "Wu et al. accounting: identical physics, but reported water is "
+          "weighted by regional scarcity")
+def _stress_weighted(days, seed, jobs_per_day, utilization):
+    inst = _base(days, seed, jobs_per_day, utilization)
+    # Liters weighted by (1 + WSF)^2 relative to fleet mean: water spent in
+    # Madrid/Mumbai counts for more than water spent in Zurich.
+    w = (1.0 + inst.tele.wsf) ** 2
+    w = w / w.mean()
+    return dataclasses.replace(inst, name="water-stress-weighted",
+                               water_weight=w)
+
+
+# ---------------------------------------------------------------------------
+# Sweep runner
+# ---------------------------------------------------------------------------
+
+def run_cell(scenario: str, scheduler: str, *, days: float = 0.2,
+             seed: int = 0, jobs_per_day: float = 23000.0,
+             utilization: float = 0.15, window_s: float = 30.0,
+             sched_kwargs: Optional[Dict] = None) -> Dict:
+    """Build one scenario instance, run one scheduler through it, and return
+    a tidy result row. Deterministic in its arguments; safe to run in a
+    worker process (everything is rebuilt from primitives)."""
+    from repro.core import solvers
+    from repro.core.baselines import make_scheduler
+
+    solvers.available_backends()     # one-time backend imports, off the clock
+    inst = get_scenario(scenario).build(days, seed, jobs_per_day, utilization)
+    kw = sched_kwargs if (sched_kwargs and scheduler == "waterwise") else {}
+    sched = make_scheduler(scheduler, inst.tele, **kw)
+    sim = EventSimulator(inst.tele, inst.capacity,
+                         SimConfig(window_s=window_s),
+                         capacity_events=inst.capacity_events)
+    t0 = time.perf_counter()
+    result = sim.run(inst.jobs, sched)
+    wall = time.perf_counter() - t0
+    row = dict(scenario=scenario, scheduler=scheduler, **summarize(result))
+    row["wall_s"] = wall
+    row["unfinished"] = result["unfinished"]
+    weight = (inst.water_weight if inst.water_weight is not None
+              else np.ones(inst.tele.num_regions))
+    row["stress_water_kl"] = float(
+        sum(r.water_l * weight[r.region] for r in result["records"]) / 1e3)
+    return row
+
+
+def sweep(schedulers: Sequence[str], scenarios: Optional[Sequence[str]] = None,
+          *, days: float = 0.2, seed: int = 0,
+          jobs_per_day: float = 23000.0, utilization: float = 0.15,
+          window_s: float = 30.0, sched_kwargs: Optional[Dict] = None,
+          max_workers: Optional[int] = None) -> List[Dict]:
+    """Run the schedulers × scenarios cross product; one tidy row per cell.
+
+    ``max_workers > 1`` fans cells out over worker processes (each cell is
+    independent and deterministic, so parallel and serial sweeps produce
+    identical rows). Defaults to the CPU count capped by the cell count.
+    Within each scenario, savings percentages are attached relative to the
+    ``baseline`` scheduler when it is part of the sweep.
+    """
+    scenarios = list(scenarios) if scenarios is not None else list_scenarios()
+    for s in scenarios:
+        get_scenario(s)          # fail fast on typos
+    cells = [(sc, sd) for sc in scenarios for sd in schedulers]
+    kw = dict(days=days, seed=seed, jobs_per_day=jobs_per_day,
+              utilization=utilization, window_s=window_s,
+              sched_kwargs=sched_kwargs)
+    if max_workers is None:
+        max_workers = min(os.cpu_count() or 1, len(cells))
+    rows: List[Dict] = []
+    if max_workers > 1 and len(cells) > 1:
+        with concurrent.futures.ProcessPoolExecutor(max_workers) as pool:
+            futs = [pool.submit(run_cell, sc, sd, **kw) for sc, sd in cells]
+            rows = [f.result() for f in futs]
+    else:
+        rows = [run_cell(sc, sd, **kw) for sc, sd in cells]
+    # Savings relative to the in-scenario baseline scheduler.
+    by_scenario: Dict[str, Dict] = {}
+    for row in rows:
+        if row["scheduler"] == "baseline":
+            by_scenario[row["scenario"]] = row
+    for row in rows:
+        base = by_scenario.get(row["scenario"])
+        if base is not None:
+            row.update(savings_vs(base, row))
+            bw = base["stress_water_kl"]
+            row["stress_water_savings_pct"] = (
+                100.0 * (bw - row["stress_water_kl"]) / bw if bw else 0.0)
+    return rows
+
+
+# "unfinished" stays in the default view: a scheduler that strands jobs
+# accrues less footprint than one that ran everything — savings read from a
+# row with unfinished > 0 are not comparable to the baseline's.
+_TABLE_COLS = ("scenario", "scheduler", "jobs", "unfinished", "carbon_kg",
+               "water_kl", "stress_water_kl", "carbon_savings_pct",
+               "water_savings_pct", "violation_pct", "mean_service_ratio",
+               "wall_s")
+_CSV_COLS = _TABLE_COLS + ("stress_water_savings_pct", "p99_service_ratio",
+                           "utilization", "mean_solve_ms", "moved_pct")
+
+
+def to_table(rows: Sequence[Dict], cols: Sequence[str] = _TABLE_COLS) -> str:
+    """Fixed-width tidy table (one line per sweep cell)."""
+    def fmt(v):
+        if isinstance(v, float):
+            return f"{v:.2f}"
+        return str(v)
+    table = [[fmt(r.get(c, "")) for c in cols] for r in rows]
+    widths = [max(len(c), *(len(t[i]) for t in table)) if table else len(c)
+              for i, c in enumerate(cols)]
+    lines = ["  ".join(c.ljust(w) for c, w in zip(cols, widths))]
+    lines.append("  ".join("-" * w for w in widths))
+    for t in table:
+        lines.append("  ".join(v.rjust(w) for v, w in zip(t, widths)))
+    return "\n".join(lines)
+
+
+def to_csv(rows: Sequence[Dict], path: str,
+           cols: Sequence[str] = _CSV_COLS) -> None:
+    with open(path, "w") as f:
+        f.write(",".join(cols) + "\n")
+        for r in rows:
+            f.write(",".join(str(r.get(c, "")) for c in cols) + "\n")

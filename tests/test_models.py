@@ -105,8 +105,14 @@ def test_decode_matches_forward(arch):
         ref = full_logits[:, t]
         a = np.asarray(logits, np.float32)
         b = np.asarray(ref, np.float32)
-        # bf16 models: compare argmax + coarse values
-        assert (a.argmax(-1) == b.argmax(-1)).mean() >= 0.95, f"pos {t}"
+        # bf16 models: greedy path must match up to exact near-ties — where
+        # argmax differs, the decoded token's reference logit must be within
+        # the comparison tolerance of the reference max.
+        ai, bi = a.argmax(-1), b.argmax(-1)
+        rows = np.arange(a.shape[0])
+        tie_gap = b[rows, bi] - b[rows, ai]
+        assert ((ai == bi) | (tie_gap <= 0.15)).all(), \
+            f"pos {t}: argmax {ai} vs {bi}, gap {tie_gap}"
         np.testing.assert_allclose(a, b, atol=0.15, rtol=0.1)
 
 

@@ -1,0 +1,177 @@
+"""Scenario registry + sweep runner + batched solver entry points."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import solvers, telemetry
+from repro.sim import scenarios
+
+SWEEP_KW = dict(days=0.05, seed=0, jobs_per_day=23000.0, max_workers=1)
+
+
+def test_registry_contains_required_scenarios():
+    names = scenarios.list_scenarios()
+    for required in ("nominal", "drought-summer", "decarbonization",
+                     "capacity-loss", "burst-storm", "water-stress-weighted"):
+        assert required in names
+    with pytest.raises(KeyError):
+        scenarios.get_scenario("no-such-regime")
+
+
+def test_scenario_builders_are_deterministic():
+    for name in scenarios.list_scenarios():
+        a = scenarios.get_scenario(name).build(0.05, 0, 23000.0, 0.15)
+        b = scenarios.get_scenario(name).build(0.05, 0, 23000.0, 0.15)
+        assert len(a.jobs) == len(b.jobs)
+        assert [j.submit_time_s for j in a.jobs] == \
+               [j.submit_time_s for j in b.jobs]
+        assert [j.home_region for j in a.jobs] == \
+               [j.home_region for j in b.jobs]
+        np.testing.assert_array_equal(a.capacity, b.capacity)
+        np.testing.assert_array_equal(a.tele.ci, b.tele.ci)
+        np.testing.assert_array_equal(a.tele.wue, b.tele.wue)
+
+
+def test_perturbations_move_the_right_signals():
+    base = scenarios.get_scenario("nominal").build(0.05, 0, 23000.0, 0.15)
+    drought = scenarios.get_scenario("drought-summer").build(
+        0.05, 0, 23000.0, 0.15)
+    assert (drought.tele.wue > base.tele.wue).all()
+    assert (drought.tele.wsf >= base.tele.wsf).all()
+    for days in (0.2, 1.0):
+        decarb = scenarios.get_scenario("decarbonization").build(
+            days, 0, 23000.0, 0.15)
+        nominal = scenarios.get_scenario("nominal").build(
+            days, 0, 23000.0, 0.15)
+        sim_hours = int(days * 24)
+        window = slice(0, max(sim_hours, 1))
+        # The ramp must land inside the *simulated* window, not just
+        # somewhere in the (longer) telemetry horizon.
+        assert decarb.tele.ci[window].sum() < nominal.tele.ci[window].sum()
+        np.testing.assert_array_equal(decarb.tele.ci[0], nominal.tele.ci[0])
+
+
+def test_capacity_loss_scenario_has_events():
+    inst = scenarios.get_scenario("capacity-loss").build(
+        1.0, 0, 23000.0, 0.15)
+    assert len(inst.capacity_events) == 2
+    (t0, degraded), (t1, restored) = inst.capacity_events
+    assert 0 < t0 < t1
+    assert degraded.sum() < restored.sum()
+    assert (degraded == 0).any()
+
+
+def test_sweep_rows_and_savings():
+    rows = scenarios.sweep(["baseline", "least-load"],
+                           ["nominal", "drought-summer"], **SWEEP_KW)
+    assert len(rows) == 4
+    for row in rows:
+        assert {"scenario", "scheduler", "carbon_kg", "water_kl",
+                "stress_water_kl", "wall_s"} <= set(row)
+        if row["scheduler"] == "baseline":
+            assert row["carbon_savings_pct"] == 0.0
+    table = scenarios.to_table(rows)
+    assert "drought-summer" in table and "least-load" in table
+
+
+def test_sweep_parallel_matches_serial():
+    serial = scenarios.sweep(["baseline"], ["nominal"], **SWEEP_KW)
+    par_kw = dict(SWEEP_KW, max_workers=2)
+    parallel = scenarios.sweep(["baseline"], ["nominal"], **par_kw)
+    assert serial[0]["carbon_kg"] == parallel[0]["carbon_kg"]
+    assert serial[0]["water_kl"] == parallel[0]["water_kl"]
+
+
+def test_stress_weighting_changes_reported_water_only():
+    kw = dict(SWEEP_KW)
+    plain = scenarios.sweep(["baseline"], ["nominal"], **kw)[0]
+    stressed = scenarios.sweep(["baseline"], ["water-stress-weighted"],
+                               **kw)[0]
+    # Same physics -> same raw footprints; only the stress view differs.
+    assert stressed["carbon_kg"] == pytest.approx(plain["carbon_kg"])
+    assert stressed["water_kl"] == pytest.approx(plain["water_kl"])
+    assert stressed["stress_water_kl"] != pytest.approx(
+        stressed["water_kl"], rel=1e-3)
+    assert plain["stress_water_kl"] == pytest.approx(plain["water_kl"])
+
+
+# ---------------------------------------------------------------------------
+# Batched / padded solver entry points
+# ---------------------------------------------------------------------------
+
+def _random_instance(rng):
+    M = int(rng.integers(3, 30))
+    N = int(rng.integers(2, 6))
+    cost = rng.random((M, N)) * 10
+    allowed = rng.random((M, N)) < 0.85
+    allowed[np.arange(M), rng.integers(0, N, M)] = True
+    cap = rng.integers(1, max(M // max(N - 1, 1), 2), N)
+    while cap.sum() < M:
+        cap[rng.integers(0, N)] += 1
+    return cost, allowed, cap
+
+
+def test_padded_solve_matches_exact_flow():
+    rng = np.random.default_rng(7)
+    for _ in range(8):
+        cost, allowed, cap = _random_instance(rng)
+        r_ref = solvers.solve(cost, allowed, cap, backend="flow")
+        r_jax = solvers.solve(cost, allowed, cap, backend="jax")
+        if not r_ref.feasible:
+            continue
+        assert r_jax.feasible
+        gap = (r_jax.objective - r_ref.objective) / max(
+            abs(r_ref.objective), 1e-9)
+        assert gap <= 0.02
+
+
+def test_solve_many_matches_single_solves():
+    rng = np.random.default_rng(11)
+    insts = [_random_instance(rng) for _ in range(12)]
+    costs, alloweds, caps = map(list, zip(*insts))
+    batched = solvers.solve_many(costs, alloweds, caps, backend="jax")
+    singles = [solvers.solve(c, a, p, backend="jax")
+               for c, a, p in insts]
+    assert len(batched) == len(singles)
+    for rb, rs in zip(batched, singles):
+        assert rb.feasible == rs.feasible
+        if rb.feasible:
+            assert rb.objective == pytest.approx(rs.objective, abs=1e-5)
+    for (c, a, p), rb in zip(insts, batched):
+        if rb.feasible:
+            counts = np.bincount(rb.assign, minlength=len(p))
+            assert (counts <= p).all()
+
+
+def test_solve_many_loop_fallback_backend():
+    rng = np.random.default_rng(13)
+    insts = [_random_instance(rng) for _ in range(4)]
+    costs, alloweds, caps = map(list, zip(*insts))
+    rs = solvers.solve_many(costs, alloweds, caps, backend="flow")
+    for (c, a, p), r in zip(insts, rs):
+        ref = solvers.solve(c, a, p, backend="flow")
+        assert r.status == ref.status
+        if r.feasible:
+            assert r.objective == pytest.approx(ref.objective, abs=1e-9)
+
+
+def test_bucket_for_is_monotone_and_covering():
+    from repro.core.solvers import jax_solver
+    last = 0
+    for b in jax_solver.BUCKETS:
+        assert b > last
+        last = b
+    for m in (1, 3, 4, 5, 17, 1000, 5000, 10000):
+        assert jax_solver.bucket_for(m) >= m
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_padded_solver_capacity_property(seed):
+    rng = np.random.default_rng(seed)
+    cost, allowed, cap = _random_instance(rng)
+    r = solvers.solve(cost, allowed, cap, backend="jax")
+    if r.feasible:
+        counts = np.bincount(r.assign, minlength=len(cap))
+        assert (counts <= cap).all()
+        assert all(allowed[m, r.assign[m]] for m in range(cost.shape[0]))
