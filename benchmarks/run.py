@@ -24,11 +24,14 @@ def run_sweep(args) -> None:
     jobs_per_day = (args.jobs_per_day if args.jobs_per_day is not None
                     else (10000.0 if full else 23000.0))
     schedulers = args.schedulers.split(",")
+    if args.trace_csv:
+        scenarios.register_csv_scenario("csv-trace", args.trace_csv)
     names = (args.scenarios.split(",") if args.scenarios
              else scenarios.list_scenarios())
     t0 = time.time()
     rows = scenarios.sweep(schedulers, names, days=days,
                            jobs_per_day=jobs_per_day, seed=args.seed,
+                           tolerance=args.tolerance,
                            max_workers=args.workers)
     print(scenarios.to_table(rows))
     out = os.path.join(os.path.dirname(__file__), "out")
@@ -54,6 +57,13 @@ def main() -> None:
     ap.add_argument("--jobs-per-day", type=float, default=None)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--workers", type=int, default=None)
+    ap.add_argument("--tolerance", type=float, default=None,
+                    help="delay-tolerance override (TOL fraction of exec "
+                         "time; the temporal-shifting slack dimension)")
+    ap.add_argument("--trace-csv", default="",
+                    help="register a real-trace CSV as scenario 'csv-trace' "
+                         "(canonical columns: job_id,submit_s,duration_s,"
+                         "energy_kwh,home_region)")
     args = ap.parse_args()
 
     if args.sweep:
@@ -65,6 +75,8 @@ def main() -> None:
     sweep_only = dict(scenarios=args.scenarios != "", days=args.days is not None,
                       jobs_per_day=args.jobs_per_day is not None,
                       seed=args.seed != 0, workers=args.workers is not None,
+                      tolerance=args.tolerance is not None,
+                      trace_csv=args.trace_csv != "",
                       schedulers=args.schedulers
                       != ap.get_default("schedulers"))
     if any(sweep_only.values()):

@@ -1,0 +1,50 @@
+"""Forecast-driven temporal shifting in ~30 lines.
+
+Runs one delay-tolerant Borg-like cell through the reactive ``waterwise``
+controller, the Holt-Winters-driven ``waterwise-forecast`` planner, and the
+true-future ``waterwise-oracle`` upper bound — under nominal telemetry and
+under the ``forecast-error`` regime (the planner's forecast is +30% biased
+and 15% noisy while physics stay nominal). Prints the tidy table with the
+forecast-accuracy and deferral-latency columns, then the joint-cost summary:
+
+  PYTHONPATH=src python examples/forecast_shift.py              # ~1 min
+  PYTHONPATH=src python examples/forecast_shift.py --days 0.05  # CI smoke
+"""
+import argparse
+
+from repro.sim import scenarios
+
+SCHEDULERS = ["waterwise", "waterwise-forecast", "waterwise-oracle"]
+COLS = ("scenario", "scheduler", "jobs", "carbon_kg", "water_kl",
+        "violation_pct", "forecast_mape", "mean_defer_s", "deferred_pct",
+        "wall_s")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--days", type=float, default=0.2)
+    ap.add_argument("--tolerance", type=float, default=3.0,
+                    help="delay tolerance (TOL x exec time of slack) — "
+                         "temporal shifting needs slack to shift")
+    args = ap.parse_args()
+
+    rows = scenarios.sweep(SCHEDULERS, ["nominal", "forecast-error"],
+                           days=args.days, seed=0,
+                           tolerance=args.tolerance)
+    print(scenarios.to_table(rows, COLS))
+    print()
+    for scen in ("nominal", "forecast-error"):
+        cells = {r["scheduler"]: r for r in rows if r["scenario"] == scen}
+        ww = cells["waterwise"]
+        for name in ("waterwise-forecast", "waterwise-oracle"):
+            r = cells[name]
+            joint = 0.5 * (r["carbon_kg"] / ww["carbon_kg"]
+                           + r["water_kl"] / ww["water_kl"])
+            print(f"{scen:>16} {name}: joint carbon+water cost "
+                  f"{100 * (1 - joint):+.2f}% vs reactive waterwise "
+                  f"({r['deferred_pct']:.1f}% of jobs time-shifted, "
+                  f"forecast MAPE {r['forecast_mape']:.1f}%)")
+
+
+if __name__ == "__main__":
+    main()

@@ -196,8 +196,21 @@ class SchedulerSpec:
     make: callable
 
 
+# Schedulers that accept tuning kwargs (the sweep's ``sched_kwargs`` are
+# forwarded only to these); the forecast-driven ones additionally accept the
+# ``forecast_bias`` / ``forecast_noise`` injection of the forecast-error
+# scenario regime.
+FORECAST_SCHEDULERS = frozenset(
+    {"waterwise-forecast", "waterwise-oracle", "carbon-forecast"})
+TUNABLE_SCHEDULERS = frozenset({"waterwise"}) | FORECAST_SCHEDULERS
+
+
 def make_scheduler(name: str, tele, **kw):
-    from repro.core.controller import Controller
+    from repro.core.controller import Controller, ForecastController
+    if name == "waterwise-oracle":
+        kw = {**kw, "forecaster": "oracle"}
+    elif name == "carbon-forecast":
+        kw = {**kw, "lam_co2": 1.0, "lam_h2o": 0.0}
     table = {
         "baseline": lambda: Baseline(tele),
         "round-robin": lambda: RoundRobin(tele),
@@ -206,5 +219,8 @@ def make_scheduler(name: str, tele, **kw):
         "water-greedy-opt": lambda: GreedyOpt(tele, "water"),
         "ecovisor": lambda: Ecovisor(tele),
         "waterwise": lambda: Controller(tele, **kw),
+        "waterwise-forecast": lambda: ForecastController(tele, **kw),
+        "waterwise-oracle": lambda: ForecastController(tele, **kw),
+        "carbon-forecast": lambda: ForecastController(tele, **kw),
     }
     return table[name]()

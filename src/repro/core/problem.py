@@ -54,6 +54,14 @@ class Job:
         spend at most (1+TOL)·t_j in the system."""
         return self.submit_time_s + (1.0 + self.tolerance) * self.exec_time_s
 
+    def slack_budget_s(self, now_s: float) -> float:
+        """Remaining tolerance budget at ``now_s``: TOL·t_j minus the queue
+        wait already burnt. The single definition shared by the slack
+        manager, the deferral queue, and the temporal feasibility mask —
+        they must agree or deferral could cause a deadline miss."""
+        return (self.tolerance * self.exec_time_s
+                - max(now_s - self.submit_time_s, 0.0))
+
 
 @dataclasses.dataclass
 class ProblemInstance:
@@ -85,6 +93,26 @@ class ProblemInstance:
         return obj
 
 
+def latency_matrix(home: np.ndarray, size_bytes: np.ndarray,
+                   bw_gbps: Optional[np.ndarray] = None,
+                   rtt_s: Optional[np.ndarray] = None) -> np.ndarray:
+    """[M, N] transfer latency from each job's home to every region.
+
+    Vectorized equivalent of ``telemetry.transfer_latency_s`` over a job
+    batch (zero on the home arc). Shared by the cost-matrix builder, the
+    slack manager, and the temporal planner.
+    """
+    if bw_gbps is None:
+        bw_gbps = telemetry.WAN_BW_GBPS
+    if rtt_s is None:
+        rtt_s = telemetry.WAN_RTT_S
+    home = np.asarray(home)
+    bw = np.maximum(bw_gbps[home] * 1e9, 1.0)               # [M, N]
+    lat = 2.0 + rtt_s[home] + np.asarray(size_bytes)[:, None] / bw
+    lat[np.arange(len(home)), home] = 0.0
+    return lat
+
+
 def build(jobs: Sequence[Job], tele: telemetry.Telemetry, now_s: float,
           capacity: np.ndarray, server: footprint.ServerSpec,
           bw_gbps: Optional[np.ndarray] = None,
@@ -113,15 +141,7 @@ def build(jobs: Sequence[Job], tele: telemetry.Telemetry, now_s: float,
                               snap["ewif"][None, :], snap["wue"][None, :],
                               snap["wsf"][None, :], server)
 
-    if bw_gbps is None:
-        bw_gbps = telemetry.WAN_BW_GBPS
-    lat = np.zeros((M, N))
-    for n in range(N):
-        not_home = home != n
-        bw = bw_gbps[home, n] * 1e9
-        rtt = telemetry.WAN_RTT_S[home, n]
-        lat[:, n] = np.where(not_home, 2.0 + rtt + size / np.maximum(bw, 1.0),
-                             0.0)
+    lat = latency_matrix(home, size, bw_gbps)
 
     # Eq (11) with slack accounting: the fraction of tolerance already burnt
     # by queue-waiting plus what the transfer would burn.

@@ -18,24 +18,26 @@ from typing import Sequence
 
 import numpy as np
 
-from repro.core import telemetry
-from repro.core.problem import Job
+from repro.core.problem import Job, latency_matrix
 
 
 def urgency(jobs: Sequence[Job], now_s: float,
             bw_gbps: np.ndarray = None) -> np.ndarray:
-    """Eq (14) urgency score per job (seconds of remaining slack)."""
-    if bw_gbps is None:
-        bw_gbps = telemetry.WAN_BW_GBPS
-    N = bw_gbps.shape[0]
-    out = np.empty(len(jobs))
-    for i, j in enumerate(jobs):
-        lat = [telemetry.transfer_latency_s(j.package_bytes, j.home_region, n)
-               for n in range(N)]
-        l_avg = float(np.mean(lat))
-        waited = max(now_s - j.submit_time_s, 0.0)
-        out[i] = j.tolerance * j.exec_time_s - l_avg - waited
-    return out
+    """Eq (14) urgency score per job (seconds of remaining slack).
+
+    One vectorized latency-matrix evaluation instead of a per-job Python
+    loop — this runs on every congested scheduling round (Algorithm 1
+    lines 5-7), where the pending set is by definition large.
+    """
+    if not jobs:
+        return np.zeros(0)
+    home = np.array([j.home_region for j in jobs])
+    size = np.array([j.package_bytes for j in jobs])
+    l_avg = latency_matrix(home, size, bw_gbps).mean(axis=1)
+    waited = np.maximum(
+        now_s - np.array([j.submit_time_s for j in jobs]), 0.0)
+    tol_budget = np.array([j.tolerance * j.exec_time_s for j in jobs])
+    return tol_budget - l_avg - waited
 
 
 def pick_most_urgent(jobs: Sequence[Job], now_s: float, k: int,

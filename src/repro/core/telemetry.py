@@ -23,7 +23,7 @@ sensitivity study).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -194,6 +194,9 @@ class Telemetry:
       pue         [R] power usage effectiveness (static)
       water_int   Eq (6) water intensity, L/kWh
       hours       [T] hour index
+      wb_c        [T, R] wet-bulb temperature, °C (the raw weather driving
+                  WUE; kept because WUE clips at its physical floor, so heat
+                  extremes are only visible in the wet-bulb series itself)
     """
     ci: np.ndarray
     ewif: np.ndarray
@@ -201,6 +204,7 @@ class Telemetry:
     wsf: np.ndarray
     pue: np.ndarray
     hours: np.ndarray
+    wb_c: Optional[np.ndarray] = None
 
     @property
     def num_hours(self) -> int:
@@ -342,6 +346,7 @@ def generate(days: int = 10, seed: int = 0, ewif_table: str = "macknick",
     ci = np.zeros((T, R))
     ewif = np.zeros((T, R))
     wue = np.zeros((T, R))
+    wb = np.zeros((T, R))
     wsf = np.array([r.wsf for r in regions])
     pue = np.array([r.pue for r in regions])
 
@@ -378,5 +383,7 @@ def generate(days: int = 10, seed: int = 0, ewif_table: str = "macknick",
                                             / 24.0 * 2 * np.pi)
                 + _smooth_noise(rng, T, corr_hours=48.0, amp=reg.wb_synoptic_c))
         wue[:, ri] = wue_from_wetbulb(t_wb)
+        wb[:, ri] = t_wb
 
-    return Telemetry(ci=ci, ewif=ewif, wue=wue, wsf=wsf, pue=pue, hours=hours)
+    return Telemetry(ci=ci, ewif=ewif, wue=wue, wsf=wsf, pue=pue, hours=hours,
+                     wb_c=wb)

@@ -1,0 +1,29 @@
+"""Forecasting + temporal-shifting subsystem.
+
+``base``        Forecaster interface, persistence / seasonal-naive baselines,
+                the true-future Oracle, and the error-injection Perturbed
+                wrapper (the ``forecast_error`` scenario regime).
+``holtwinters`` Damped-trend seasonal Holt–Winters fit with ``jax.lax.scan``,
+                jitted once per history shape.
+``backtest``    Walk-forward MAPE / pinball-loss / coverage scoring against
+                telemetry series.
+``planner``     Spatio-temporal (regions × horizon-slots) assignment builder
+                + the deferral queue used by ``core.controller
+                .ForecastController``.
+"""
+from repro.forecast import holtwinters as _holtwinters  # registers the model
+from repro.forecast.backtest import (backtest, backtest_telemetry, mape,
+                                     pinball_loss)
+from repro.forecast.base import (Forecast, Forecaster, Oracle, Persistence,
+                                 Perturbed, SeasonalNaive, list_forecasters,
+                                 make_forecaster)
+from repro.forecast.holtwinters import HoltWinters
+from repro.forecast.planner import DeferralQueue, TemporalPlan, \
+    build_temporal_plan
+
+__all__ = [
+    "Forecast", "Forecaster", "Persistence", "SeasonalNaive", "Oracle",
+    "Perturbed", "HoltWinters", "make_forecaster", "list_forecasters",
+    "backtest", "backtest_telemetry", "mape", "pinball_loss",
+    "DeferralQueue", "TemporalPlan", "build_temporal_plan",
+]

@@ -77,7 +77,19 @@ class JobRecord:
 
 
 # Capacity event: at time t_s the fleet's per-region capacity becomes `cap`.
-CapacityEvent = Tuple[float, np.ndarray]
+# The payload is either an absolute per-region vector, or a *relative* profile
+# ``("scale", fracs)`` applied to the run's base capacity — ``fracs`` may be a
+# scalar ("-30% everywhere at peak heat" == 0.7) or a per-region array.
+CapacityEvent = Tuple[float, object]
+
+
+def resolve_capacity(payload, base: np.ndarray) -> np.ndarray:
+    """Materialize a capacity-event payload against the base capacity."""
+    if isinstance(payload, tuple) and len(payload) == 2 \
+            and payload[0] == "scale":
+        frac = np.asarray(payload[1], np.float64)
+        return np.maximum(np.round(base * frac), 0).astype(np.int64)
+    return np.asarray(payload, np.int64)
 
 
 class EventSimulator:
@@ -141,11 +153,11 @@ class EventSimulator:
         stalls = 0
         while i < n_jobs or pending or cluster.busy_any():
             while ce < len(cap_events) and cap_events[ce][0] <= now:
-                t_event, new_cap = cap_events[ce]
+                t_event, payload = cap_events[ce]
                 # Settle busy/provisioned integrals up to the event instant
                 # so the capacity change is not billed retroactively.
                 cluster.advance(t_event)
-                cluster.set_capacity(new_cap)
+                cluster.set_capacity(resolve_capacity(payload, self.capacity))
                 ce += 1
             cluster.advance(now)
             while i < n_jobs and submit[i] <= now:
@@ -170,13 +182,21 @@ class EventSimulator:
                 rounds += 1
             # Deadlock guard: pending jobs that no scheduler round can place
             # and no running job will ever release capacity for. A future
-            # capacity event may still unblock them (outage restoration), so
-            # fast-forward to it rather than stalling out.
+            # capacity event may still unblock them (outage restoration), and
+            # a temporal-shifting scheduler may be holding them *on purpose*
+            # (Decision.wake_s names its planned release) — fast-forward to
+            # the earlier of the two rather than stalling out.
             if pending and not progressed and not cluster.busy_any() \
                     and i >= n_jobs:
+                wake = getattr(dec, "wake_s", None)
+                targets = []
                 if ce < len(cap_events):
+                    targets.append(max(cap_events[ce][0], now))
+                if wake is not None and wake > now + 1e-9:
+                    targets.append(wake)
+                if targets:
                     stalls = 0
-                    now = max(cap_events[ce][0], now)
+                    now = min(targets)
                     continue
                 stalls += 1
                 if stalls > 2:
@@ -294,12 +314,18 @@ class WindowedSimulator:
             else:
                 now += self.cfg.window_s
             # Deadlock guard: pending jobs that no scheduler round can place
-            # and no running job will ever release capacity for.
+            # and no running job will ever release capacity for. A scheduler
+            # holding jobs on purpose (Decision.wake_s) keeps ticking — the
+            # windowed engine spins the grid rather than jumping.
             if pending and not progressed and not cluster.busy.any() \
                     and i >= len(jobs):
-                stalls += 1
-                if stalls > 2:
-                    break
+                wake = getattr(dec, "wake_s", None)
+                if wake is not None and wake > now:
+                    stalls = 0
+                else:
+                    stalls += 1
+                    if stalls > 2:
+                        break
             else:
                 stalls = 0
         return dict(records=records, windows=windows, rounds=rounds,

@@ -50,12 +50,16 @@ class ScenarioInstance:
     tele: telemetry.Telemetry
     jobs: List[Job]
     capacity: np.ndarray
-    capacity_events: List[Tuple[float, np.ndarray]] = \
+    capacity_events: List[Tuple[float, object]] = \
         dataclasses.field(default_factory=list)
     # Per-region weights applied to each record's water footprint when
     # reporting `stress_water_kl` (Wu et al.: liters in a water-stressed
     # basin are not interchangeable with liters in a wet one). None = 1.
     water_weight: Optional[np.ndarray] = None
+    # Forecast-error regime (systematic over-/under-prediction × noise):
+    # injected into forecast-driven schedulers by ``run_cell``. 1.0/0.0 = off.
+    forecast_bias: float = 1.0
+    forecast_noise: float = 0.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -151,14 +155,14 @@ def _base(days: float, seed: int, jobs_per_day: float, utilization: float,
 
 
 @register("nominal", "Borg-like steady trace, unperturbed telemetry")
-def _nominal(days, seed, jobs_per_day, utilization):
-    return _base(days, seed, jobs_per_day, utilization)
+def _nominal(days, seed, jobs_per_day, utilization, **kw):
+    return _base(days, seed, jobs_per_day, utilization, **kw)
 
 
 @register("drought-summer",
           "Heatwave + drought: cooling WUE +45%, scarcity factors elevated")
-def _drought(days, seed, jobs_per_day, utilization):
-    inst = _base(days, seed, jobs_per_day, utilization)
+def _drought(days, seed, jobs_per_day, utilization, **kw):
+    inst = _base(days, seed, jobs_per_day, utilization, **kw)
     tele = raise_wsf(scale_wue(inst.tele, 1.45), gain=1.4, floor=0.1)
     return dataclasses.replace(inst, name="drought-summer", tele=tele)
 
@@ -166,8 +170,8 @@ def _drought(days, seed, jobs_per_day, utilization):
 @register("decarbonization",
           "Grid-decarbonization event: dirtiest two grids ramp CI to 0.55x "
           "from 40% of the horizon")
-def _decarb(days, seed, jobs_per_day, utilization):
-    inst = _base(days, seed, jobs_per_day, utilization)
+def _decarb(days, seed, jobs_per_day, utilization, **kw):
+    inst = _base(days, seed, jobs_per_day, utilization, **kw)
     dirty = list(np.argsort(inst.tele.ci.mean(axis=0))[-2:])
     tele = decarbonize(inst.tele, dirty, horizon_hours=days * 24.0)
     return dataclasses.replace(inst, name="decarbonization", tele=tele)
@@ -176,8 +180,8 @@ def _decarb(days, seed, jobs_per_day, utilization):
 @register("capacity-loss",
           "Region outage: the greenest region loses all of its servers for "
           "the middle ~15% of the horizon")
-def _outage(days, seed, jobs_per_day, utilization):
-    inst = _base(days, seed, jobs_per_day, utilization)
+def _outage(days, seed, jobs_per_day, utilization, **kw):
+    inst = _base(days, seed, jobs_per_day, utilization, **kw)
     green = int(np.argmin(inst.tele.ci.mean(axis=0)))
     degraded = inst.capacity.copy()
     degraded[green] = 0
@@ -190,23 +194,114 @@ def _outage(days, seed, jobs_per_day, utilization):
 @register("burst-storm",
           "Alibaba-style burst storm: bursty short-job trace at 25% target "
           "utilization")
-def _burst(days, seed, jobs_per_day, utilization):
+def _burst(days, seed, jobs_per_day, utilization, **kw):
     inst = _base(days, seed, jobs_per_day, max(utilization, 0.25),
-                 trace="alibaba")
+                 trace="alibaba", **kw)
     return dataclasses.replace(inst, name="burst-storm")
 
 
 @register("water-stress-weighted",
           "Wu et al. accounting: identical physics, but reported water is "
           "weighted by regional scarcity")
-def _stress_weighted(days, seed, jobs_per_day, utilization):
-    inst = _base(days, seed, jobs_per_day, utilization)
+def _stress_weighted(days, seed, jobs_per_day, utilization, **kw):
+    inst = _base(days, seed, jobs_per_day, utilization, **kw)
     # Liters weighted by (1 + WSF)^2 relative to fleet mean: water spent in
     # Madrid/Mumbai counts for more than water spent in Zurich.
     w = (1.0 + inst.tele.wsf) ** 2
     w = w / w.mean()
     return dataclasses.replace(inst, name="water-stress-weighted",
                                water_weight=w)
+
+
+@register("forecast-error",
+          "Nominal physics, but forecast-driven schedulers see a +30% biased "
+          "and 15%-noisy forecast (systematic over-prediction)")
+def _forecast_error(days, seed, jobs_per_day, utilization, **kw):
+    inst = _base(days, seed, jobs_per_day, utilization, **kw)
+    return dataclasses.replace(inst, name="forecast-error",
+                               forecast_bias=1.30, forecast_noise=0.15)
+
+
+def heat_derate_events(tele: telemetry.Telemetry, days: float,
+                       frac: float = 0.7, wb_quantile: float = 0.85
+                       ) -> List[Tuple[float, object]]:
+    """Capacity events derived from the telemetry's wet-bulb extremes.
+
+    The fleet-mean wet-bulb series (``Telemetry.wb_c`` — the raw weather;
+    WUE itself clips at its physical floor and hides the extremes) locates
+    the heat peak: the longest contiguous run of hours above the
+    ``wb_quantile`` quantile becomes a relative derate. Regions whose own
+    wet-bulb during that window exceeds their horizon median are scaled to
+    ``frac`` of base capacity (cooling-limited); the rest keep full
+    capacity — no fixed outage window, no absolute vectors.
+    """
+    wb = tele.wb_c if tele.wb_c is not None else tele.wue
+    H = max(int(days * 24), 1)
+    fleet = wb[:H].mean(axis=1)
+    thresh = np.quantile(fleet, wb_quantile)
+    hot = fleet >= thresh
+    if not hot.any() or hot.all():
+        return []
+    # Longest contiguous hot run.
+    best, cur, best_span = 0, 0, (0, 0)
+    for h, flag in enumerate(hot):
+        if flag:
+            cur += 1
+            if cur > best:
+                best, best_span = cur, (h - cur + 1, h + 1)
+        else:
+            cur = 0
+    h0, h1 = best_span
+    med = np.median(wb[:H], axis=0)
+    peak_wb = wb[h0:h1].mean(axis=0)
+    fracs = np.where(peak_wb > med, frac, 1.0)
+    return [(h0 * 3600.0, ("scale", fracs)),
+            (h1 * 3600.0, ("scale", np.ones(tele.num_regions)))]
+
+
+@register("heat-derate",
+          "Wet-bulb-extreme derate: during the hottest contiguous hours, "
+          "cooling-limited regions drop to 70% capacity (relative profile "
+          "derived from telemetry, not fixed fractions)")
+def _heat_derate(days, seed, jobs_per_day, utilization, **kw):
+    inst = _base(days, seed, jobs_per_day, utilization, **kw)
+    events = heat_derate_events(inst.tele, days)
+    return dataclasses.replace(inst, name="heat-derate",
+                               capacity_events=events)
+
+
+def register_csv_scenario(name: str, path: str, *,
+                          column_map: Optional[Dict] = None,
+                          unit_scale: Optional[Dict] = None,
+                          description: str = "") -> Scenario:
+    """Register a scenario whose trace is a real CSV slice.
+
+    The builder drops cell-for-cell into the sweep: the CSV replaces the
+    synthetic generator (column mapping + deterministic arrival-rate
+    thinning to the cell's ``jobs_per_day``), while telemetry, capacity
+    scaling, and accounting views stay identical to ``nominal``. Home
+    regions are folded modulo the region count.
+    """
+    from repro.sim.trace import load_csv, rescale_arrival_rate
+
+    def build(days, seed, jobs_per_day, utilization, *, tolerance=0.5):
+        tele = telemetry.generate(days=max(int(np.ceil(days)) + 1, 2),
+                                  seed=seed)
+        jobs = load_csv(path, tolerance=tolerance, column_map=column_map,
+                        unit_scale=unit_scale)
+        jobs = [j for j in jobs if j.submit_time_s < days * DAY]
+        for j in jobs:
+            j.home_region = j.home_region % tele.num_regions
+        jobs = rescale_arrival_rate(jobs, days, jobs_per_day, seed=seed)
+        for i, j in enumerate(jobs):
+            j.job_id = i
+        cap = scale_capacity_for_utilization(jobs, days, tele.num_regions,
+                                             utilization)
+        return ScenarioInstance(name=name, tele=tele, jobs=jobs,
+                                capacity=cap)
+
+    register(name, description or f"real trace from {path}")(build)
+    return _REGISTRY[name]
 
 
 # ---------------------------------------------------------------------------
@@ -216,16 +311,34 @@ def _stress_weighted(days, seed, jobs_per_day, utilization):
 def run_cell(scenario: str, scheduler: str, *, days: float = 0.2,
              seed: int = 0, jobs_per_day: float = 23000.0,
              utilization: float = 0.15, window_s: float = 30.0,
+             tolerance: Optional[float] = None,
              sched_kwargs: Optional[Dict] = None) -> Dict:
     """Build one scenario instance, run one scheduler through it, and return
     a tidy result row. Deterministic in its arguments; safe to run in a
-    worker process (everything is rebuilt from primitives)."""
+    worker process (everything is rebuilt from primitives).
+
+    ``tolerance`` overrides the builders' default delay tolerance (the
+    temporal-shifting dimension: TOL×exec_time of slack per job);
+    ``sched_kwargs`` reaches only the tunable schedulers (waterwise + the
+    forecast variants). Forecast-driven schedulers additionally report
+    ``forecast_mape`` (realized % error of the forecasts they acted on),
+    ``mean_defer_s`` (average intentional hold), and ``deferred_pct``.
+    """
     from repro.core import solvers
-    from repro.core.baselines import make_scheduler
+    from repro.core.baselines import (FORECAST_SCHEDULERS, TUNABLE_SCHEDULERS,
+                                      make_scheduler)
 
     solvers.available_backends()     # one-time backend imports, off the clock
-    inst = get_scenario(scenario).build(days, seed, jobs_per_day, utilization)
-    kw = sched_kwargs if (sched_kwargs and scheduler == "waterwise") else {}
+    build_kw = {} if tolerance is None else {"tolerance": tolerance}
+    inst = get_scenario(scenario).build(days, seed, jobs_per_day, utilization,
+                                        **build_kw)
+    kw = dict(sched_kwargs) if (sched_kwargs
+                                and scheduler in TUNABLE_SCHEDULERS) else {}
+    if scheduler in FORECAST_SCHEDULERS \
+            and (inst.forecast_bias != 1.0 or inst.forecast_noise > 0.0):
+        kw.setdefault("forecast_bias", inst.forecast_bias)
+        kw.setdefault("forecast_noise", inst.forecast_noise)
+        kw.setdefault("forecast_seed", seed)
     sched = make_scheduler(scheduler, inst.tele, **kw)
     sim = EventSimulator(inst.tele, inst.capacity,
                          SimConfig(window_s=window_s),
@@ -240,13 +353,19 @@ def run_cell(scenario: str, scheduler: str, *, days: float = 0.2,
               else np.ones(inst.tele.num_regions))
     row["stress_water_kl"] = float(
         sum(r.water_l * weight[r.region] for r in result["records"]) / 1e3)
+    if hasattr(sched, "forecast_mape"):
+        row["forecast_mape"] = float(sched.forecast_mape)
+        row["mean_defer_s"] = float(sched.mean_defer_s)
+        row["deferred_pct"] = (100.0 * sched.deferred_jobs
+                               / max(len(inst.jobs), 1))
     return row
 
 
 def sweep(schedulers: Sequence[str], scenarios: Optional[Sequence[str]] = None,
           *, days: float = 0.2, seed: int = 0,
           jobs_per_day: float = 23000.0, utilization: float = 0.15,
-          window_s: float = 30.0, sched_kwargs: Optional[Dict] = None,
+          window_s: float = 30.0, tolerance: Optional[float] = None,
+          sched_kwargs: Optional[Dict] = None,
           max_workers: Optional[int] = None) -> List[Dict]:
     """Run the schedulers × scenarios cross product; one tidy row per cell.
 
@@ -262,7 +381,7 @@ def sweep(schedulers: Sequence[str], scenarios: Optional[Sequence[str]] = None,
     cells = [(sc, sd) for sc in scenarios for sd in schedulers]
     kw = dict(days=days, seed=seed, jobs_per_day=jobs_per_day,
               utilization=utilization, window_s=window_s,
-              sched_kwargs=sched_kwargs)
+              tolerance=tolerance, sched_kwargs=sched_kwargs)
     if max_workers is None:
         max_workers = min(os.cpu_count() or 1, len(cells))
     rows: List[Dict] = []
@@ -295,7 +414,8 @@ _TABLE_COLS = ("scenario", "scheduler", "jobs", "unfinished", "carbon_kg",
                "water_savings_pct", "violation_pct", "mean_service_ratio",
                "wall_s")
 _CSV_COLS = _TABLE_COLS + ("stress_water_savings_pct", "p99_service_ratio",
-                           "utilization", "mean_solve_ms", "moved_pct")
+                           "utilization", "mean_solve_ms", "moved_pct",
+                           "forecast_mape", "mean_defer_s", "deferred_pct")
 
 
 def to_table(rows: Sequence[Dict], cols: Sequence[str] = _TABLE_COLS) -> str:

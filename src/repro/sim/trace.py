@@ -124,14 +124,74 @@ def alibaba_trace(days: float = 10.0, seed: int = 1, num_regions: int = 5,
     return jobs
 
 
-def load_csv(path: str, tolerance: float = 0.25) -> List[Job]:
-    """Load a real trace (job_id,submit_s,duration_s,energy_kwh,home_region)."""
+# Canonical trace columns -> (required, default). Published Borg/Alibaba
+# slices name these differently; ``column_map`` translates.
+_CSV_CANONICAL = ("job_id", "submit_s", "duration_s", "energy_kwh",
+                  "home_region")
+
+
+def load_csv(path: str, tolerance: float = 0.25,
+             column_map: Optional[dict] = None,
+             unit_scale: Optional[dict] = None,
+             package_bytes: float = 2e9) -> List[Job]:
+    """Load a real trace CSV into ``Job`` objects.
+
+    Canonical columns: ``job_id, submit_s, duration_s, energy_kwh,
+    home_region``. Published slices rarely match — ``column_map`` maps
+    canonical name -> CSV header (e.g. Google Borg:
+    ``{"submit_s": "time", "duration_s": "runtime"}``), and ``unit_scale``
+    multiplies a canonical column after mapping (e.g.
+    ``{"submit_s": 1e-6}`` for microsecond timestamps). ``energy_kwh`` may
+    be mapped from a mean-power column via ``unit_scale`` since energy =
+    power × duration is not expressible here; absent energy columns can be
+    synthesized upstream instead.
+
+    Home regions outside [0, 4] are folded modulo the region count by the
+    scenario builder, not here — the loader stays a faithful reader.
+    """
+    cmap = {c: c for c in _CSV_CANONICAL}
+    cmap.update(column_map or {})
+    scale = unit_scale or {}
     raw = np.genfromtxt(path, delimiter=",", names=True)
-    return [Job(job_id=int(r["job_id"]), home_region=int(r["home_region"]),
-                submit_time_s=float(r["submit_s"]),
-                exec_time_s=float(r["duration_s"]),
-                energy_kwh=float(r["energy_kwh"]), tolerance=tolerance)
-            for r in raw]
+    if raw.shape == ():                       # single-row CSV edge case
+        raw = raw.reshape(1)
+    missing = [c for c in _CSV_CANONICAL if cmap[c] not in
+               (raw.dtype.names or ())]
+    if missing:
+        raise ValueError(f"trace {path!r} lacks columns for {missing}; "
+                         f"available: {raw.dtype.names}")
+
+    def col(c):
+        return np.asarray(raw[cmap[c]], np.float64) * float(scale.get(c, 1.0))
+
+    jobs = [Job(job_id=int(i), home_region=int(h), submit_time_s=float(t),
+                exec_time_s=float(d), energy_kwh=float(e),
+                package_bytes=package_bytes, tolerance=tolerance)
+            for i, t, d, e, h in zip(col("job_id"), col("submit_s"),
+                                     col("duration_s"), col("energy_kwh"),
+                                     col("home_region"))]
+    jobs.sort(key=lambda j: j.submit_time_s)
+    return jobs
+
+
+def rescale_arrival_rate(jobs: Sequence[Job], days: float,
+                         target_jobs_per_day: float,
+                         seed: int = 0) -> List[Job]:
+    """Deterministically thin (or keep) a trace to ≈ ``target_jobs_per_day``.
+
+    Real slices rarely match the fleet size under study. Thinning keeps the
+    empirical arrival process (burst structure, diurnal shape) intact —
+    unlike time-warping, which would move arrivals across telemetry hours.
+    Traces *below* the target are returned unchanged (jobs are never
+    duplicated; synthetic upsampling belongs to the generators).
+    """
+    native = len(jobs) / max(days, 1e-9)
+    keep_p = target_jobs_per_day / max(native, 1e-9)
+    if keep_p >= 1.0:
+        return list(jobs)
+    rng = np.random.default_rng(seed)
+    keep = rng.random(len(jobs)) < keep_p
+    return [j for j, k in zip(jobs, keep) if k]
 
 
 def scale_capacity_for_utilization(jobs: Sequence[Job], days: float,

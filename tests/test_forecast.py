@@ -1,0 +1,130 @@
+"""Forecasting subsystem: models, backtesting, quantile bands, jit caching."""
+import time
+
+import numpy as np
+import pytest
+
+from repro import forecast
+from repro.core import telemetry
+from repro.forecast import holtwinters
+
+
+@pytest.fixture(scope="module")
+def tele():
+    return telemetry.generate(days=6, seed=0)
+
+
+BT_KW = dict(horizon=6, warmup=48, stride=6)
+
+
+def test_seasonal_naive_beats_persistence_on_diurnal_ci(tele):
+    """Carbon intensity is solar-cycle dominated: the period-24 baseline must
+    beat the random-walk baseline on it (the subsystem's sanity anchor)."""
+    p = forecast.backtest_telemetry(tele, "ci", "persistence", **BT_KW)
+    s = forecast.backtest_telemetry(tele, "ci", "seasonal-naive", **BT_KW)
+    assert s["mape"] < p["mape"]
+    assert s["n_origins"] == p["n_origins"] > 5
+
+
+def test_holtwinters_beats_persistence_on_diurnal_ci(tele):
+    p = forecast.backtest_telemetry(tele, "ci", "persistence", **BT_KW)
+    h = forecast.backtest_telemetry(tele, "ci", "holtwinters", **BT_KW)
+    assert h["mape"] < p["mape"]
+
+
+def test_oracle_forecaster_is_exact(tele):
+    r = forecast.backtest_telemetry(tele, "ci", "oracle", **BT_KW)
+    assert r["mape"] == pytest.approx(0.0, abs=1e-9)
+    assert r["pinball"] == pytest.approx(0.0, abs=1e-9)
+    assert r["coverage"] == 1.0
+
+
+def test_quantile_bands_order_and_coverage(tele):
+    for name in ("persistence", "seasonal-naive", "holtwinters"):
+        f = forecast.make_forecaster(name).fit(tele.ci[:96])
+        fc = f.predict(8)
+        assert (fc.lo <= fc.mean + 1e-12).all()
+        assert (fc.mean <= fc.hi + 1e-12).all()
+    s = forecast.backtest_telemetry(tele, "ci", "seasonal-naive", **BT_KW)
+    assert 0.5 < s["coverage"] <= 1.0     # 10/90 band should cover most truth
+
+
+def test_perturbed_wrapper_scales_mean(tele):
+    inner = forecast.SeasonalNaive().fit(tele.ci[:72])
+    biased = forecast.Perturbed(forecast.SeasonalNaive(), bias=1.3,
+                                noise=0.0, seed=0).fit(tele.ci[:72])
+    np.testing.assert_allclose(biased.predict(6).mean,
+                               1.3 * inner.predict(6).mean)
+    noisy_a = forecast.Perturbed(forecast.SeasonalNaive(), bias=1.0,
+                                 noise=0.2, seed=7).fit(tele.ci[:72])
+    noisy_b = forecast.Perturbed(forecast.SeasonalNaive(), bias=1.0,
+                                 noise=0.2, seed=7).fit(tele.ci[:72])
+    # Deterministic given (seed, history length); different from the truth.
+    np.testing.assert_array_equal(noisy_a.predict(6).mean,
+                                  noisy_b.predict(6).mean)
+    assert not np.allclose(noisy_a.predict(6).mean, inner.predict(6).mean)
+
+
+def test_forecast_interpolation_and_window_means(tele):
+    f = forecast.SeasonalNaive().fit(tele.ci[:72])
+    fc = f.predict(8)
+    t_issue = 71 * 3600.0
+    # at(): anchors at the last observation, hits the hour grid exactly.
+    np.testing.assert_allclose(fc.at(t_issue), fc.anchor)
+    np.testing.assert_allclose(fc.at(t_issue + 3600.0), fc.mean[0])
+    mid = fc.at(t_issue + 1800.0)
+    np.testing.assert_allclose(mid, 0.5 * (fc.anchor + fc.mean[0]))
+    # mean_many(): exact integral of the piecewise-linear curve — must match
+    # a fine trapezoid on at_many().
+    t0 = np.array([t_issue + 600.0, t_issue + 5000.0])
+    t1 = t0 + np.array([3600.0, 9000.0])
+    exact = fc.mean_many(t0, t1)
+    for k in range(2):
+        ts = np.linspace(t0[k], t1[k], 2001)
+        vals = fc.at_many(ts)
+        dt = ts[1] - ts[0]
+        approx = (dt * (0.5 * (vals[0] + vals[-1]) + vals[1:-1].sum(axis=0))
+                  / (t1[k] - t0[k]))
+        np.testing.assert_allclose(exact[k], approx, rtol=1e-6)
+
+
+def test_holtwinters_fit_is_jit_cached():
+    """Acceptance: second fit of the same history shape ≥10× faster than the
+    first (the lax.scan filter compiles once per padded shape)."""
+    rng = np.random.default_rng(3)
+    t = np.arange(61)
+    # 7 columns: a shape no other test uses, so the first fit must compile.
+    hist = (10.0 + 3.0 * np.sin(t / 24.0 * 2 * np.pi)[:, None]
+            + 0.1 * rng.standard_normal((61, 7)))
+    t0 = time.perf_counter()
+    holtwinters.HoltWinters().fit(hist)
+    first = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    holtwinters.HoltWinters().fit(hist)
+    second = time.perf_counter() - t0
+    assert first >= 10.0 * second, (first, second)
+
+
+def test_holtwinters_bucketing_and_fallbacks(tele):
+    for rows in (48, 49, 71, 200, 10_000):
+        b = holtwinters.fit_bucket_for(rows, 24)
+        assert b % 24 == 0
+        assert b >= min(rows, holtwinters.MAX_FIT_PERIODS * 24)
+    # Short histories degrade gracefully: seasonal-naive then persistence.
+    short = holtwinters.HoltWinters().fit(tele.ci[:30])
+    assert short.predict(4).mean.shape == (4, 5)
+    tiny = holtwinters.HoltWinters().fit(tele.ci[:3])
+    assert tiny.predict(4).mean.shape == (4, 5)
+
+
+def test_backtest_rejects_too_short_series(tele):
+    with pytest.raises(ValueError):
+        forecast.backtest(tele.ci[:10], forecast.Persistence, horizon=6,
+                          warmup=48)
+
+
+def test_make_forecaster_registry():
+    names = forecast.list_forecasters()
+    assert {"persistence", "seasonal-naive", "holtwinters"} <= set(names)
+    with pytest.raises(KeyError):
+        forecast.make_forecaster("no-such-model")
