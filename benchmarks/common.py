@@ -1,61 +1,53 @@
-"""Shared benchmark harness: run a scheduler set over a trace, emit CSV.
+"""Shared benchmark harness: run policy specs through scenario cells.
 
+Every figure module drives ``scenarios.run_cell`` — the same event-driven
+engine + scenario registry path as the sweep CLI — via ``run_cells``.
 ``quick`` mode (default, used by ``python -m benchmarks.run``) simulates a
 few hours of trace; ``--full`` reproduces the paper's 10-day/230k-job runs.
-Every figure module builds on ``sweep``.
 """
 from __future__ import annotations
 
-import copy
-import time
 from typing import Dict, List, Optional, Sequence
-
-import numpy as np
-
-from repro.core import telemetry
-from repro.core.baselines import make_scheduler
-from repro.sim import Simulator, borg_trace, savings_vs, summarize
-from repro.sim.engine import SimConfig
-from repro.sim.trace import alibaba_trace, scale_capacity_for_utilization
 
 QUICK_DAYS = 0.15
 FULL_DAYS = 10.0
 
 
-def run_one(tele, jobs, capacity, scheduler_name: str, seed: int = 0,
-            sched_kwargs: Optional[Dict] = None) -> Dict:
-    sched = make_scheduler(scheduler_name, tele, **(sched_kwargs or {}))
-    t0 = time.perf_counter()
-    res = Simulator(tele, capacity).run(copy.deepcopy(jobs), sched)
-    s = summarize(res)
-    s["wall_s"] = time.perf_counter() - t0
-    s["scheduler"] = scheduler_name
-    s["_result"] = res
-    return s
+def run_cells(schedulers: Sequence, *, days: float = QUICK_DAYS,
+              tolerance: float = 0.5, utilization: float = 0.15,
+              jobs_per_day: float = 23000.0, seed: int = 0,
+              scenario: str = "nominal", keep_result: bool = False,
+              **build_kwargs) -> Dict[str, Dict]:
+    """One ``scenarios.run_cell`` row per policy spec, keyed by policy name.
 
+    ``schedulers`` are policy specs (``"waterwise[lam_co2=0.3,lam_h2o=0.7]"``
+    or ``PolicySpec`` objects); extra keyword arguments (``trace``,
+    ``ewif_table``, ``regions``, ...) reach the scenario builder. When
+    ``baseline`` is among the specs, carbon/water savings are attached to
+    every row relative to it. ``keep_result=True`` keeps the raw engine
+    result as ``row["_result"]`` for figure-level post-processing
+    (per-region distributions, solve-time percentiles).
+    """
+    from repro.sim import scenarios
+    from repro.sim.metrics import savings_vs
 
-def sweep(schedulers: Sequence[str], *, days: float = QUICK_DAYS,
-          tolerance: float = 0.5, utilization: float = 0.15,
-          trace: str = "borg", ewif_table: str = "macknick",
-          seed: int = 0, sched_kwargs: Optional[Dict] = None,
-          rate_multiplier: float = 1.0,
-          regions: Optional[Sequence] = None) -> Dict[str, Dict]:
-    regions = regions or telemetry.REGIONS
-    tele = telemetry.generate(days=max(int(np.ceil(days)) + 1, 2), seed=seed,
-                              ewif_table=ewif_table, regions=regions)
-    make = borg_trace if trace == "borg" else alibaba_trace
-    jobs = make(days=days, seed=seed, tolerance=tolerance,
-                num_regions=len(regions), rate_multiplier=rate_multiplier)
-    cap = scale_capacity_for_utilization(jobs, days, len(regions),
-                                         utilization)
-    out = {}
-    for name in schedulers:
-        out[name] = run_one(tele, jobs, cap, name,
-                            sched_kwargs=sched_kwargs
-                            if name == "waterwise" else None)
+    out: Dict[str, Dict] = {}
+    for sched in schedulers:
+        row = scenarios.run_cell(
+            scenario, sched, days=days, seed=seed, jobs_per_day=jobs_per_day,
+            utilization=utilization, tolerance=tolerance,
+            build_kwargs=build_kwargs or None, return_result=keep_result)
+        if row["scheduler"] in out:
+            # Keyed by bare policy name — two param variants of one policy
+            # in a single call would shadow each other silently.
+            raise ValueError(
+                f"duplicate policy {row['scheduler']!r} in one run_cells "
+                f"call; run param variants in separate calls (the rows are "
+                f"keyed by policy name)")
+        out[row["scheduler"]] = row
     if "baseline" in out:
-        for name, s in out.items():
-            s.update(savings_vs(out["baseline"], s))
+        for row in out.values():
+            row.update(savings_vs(out["baseline"], row))
     return out
 
 

@@ -1,6 +1,10 @@
 """One entry point per paper table/figure (invoked by benchmarks.run).
 
-Each ``figN(...)`` mirrors the corresponding artifact in the paper:
+Each ``figN(...)`` mirrors the corresponding artifact in the paper and runs
+on ``scenarios.run_cell`` cells (the event-driven engine + policy registry —
+the windowed-era ``benchmarks.common.sweep`` harness is gone). Scheduler
+variants are expressed as policy-spec strings, e.g. the λ sweep of fig8 is
+``waterwise[lam_co2=0.3,lam_h2o=0.7]``.
 
   fig3   greedy-oracle benefit, delay-tolerance opportunity, distribution
   fig5   WaterWise vs oracles across delay tolerances (Borg trace)
@@ -20,7 +24,7 @@ from typing import Dict, List
 
 import numpy as np
 
-from benchmarks.common import QUICK_DAYS, emit, sweep
+from benchmarks.common import QUICK_DAYS, emit, run_cells
 from repro.core import telemetry
 from repro.sim.metrics import region_distribution
 
@@ -28,17 +32,21 @@ CORE = ["baseline", "waterwise", "carbon-greedy-opt", "water-greedy-opt"]
 SAVE_COLS = ["scheduler", "carbon_savings_pct", "water_savings_pct",
              "mean_service_ratio", "violation_pct", "mean_solve_ms"]
 
+# The Alibaba generator's full invocation rate (8.5× Borg, paper §6) in the
+# cell's jobs/day parameterization.
+ALIBABA_JOBS_PER_DAY = 8.5 * 23000.0
+
 
 def fig3(days=QUICK_DAYS):
     rows: List[Dict] = []
     for tol in (0.1, 0.25, 1.0, 10.0):
-        out = sweep(["baseline", "carbon-greedy-opt", "water-greedy-opt"],
-                    days=days, tolerance=tol)
+        out = run_cells(["baseline", "carbon-greedy-opt", "water-greedy-opt"],
+                        days=days, tolerance=tol)
         for name in ("carbon-greedy-opt", "water-greedy-opt"):
             rows.append(dict(out[name], tolerance=tol))
     # Fig 3(b): per-region distribution at 10% tolerance
-    out = sweep(["carbon-greedy-opt", "water-greedy-opt"], days=days,
-                tolerance=0.1)
+    out = run_cells(["carbon-greedy-opt", "water-greedy-opt"], days=days,
+                    tolerance=0.1, keep_result=True)
     dist = {n: region_distribution(out[n].pop("_result"), 5) for n in out}
     for n, d in dist.items():
         print(f"# fig3b {n} region%: " + ",".join(f"{x:.1f}" for x in d))
@@ -49,7 +57,8 @@ def fig3(days=QUICK_DAYS):
 def fig5(days=QUICK_DAYS, ewif_table="macknick", tag="fig5"):
     rows = []
     for tol in (0.25, 0.5, 0.75, 1.0):
-        out = sweep(CORE, days=days, tolerance=tol, ewif_table=ewif_table)
+        out = run_cells(CORE, days=days, tolerance=tol,
+                        ewif_table=ewif_table)
         for name in CORE[1:]:
             rows.append(dict(out[name], tolerance=tol))
     return emit(rows, ["scheduler", "tolerance"] + SAVE_COLS[1:],
@@ -63,8 +72,8 @@ def fig6(days=QUICK_DAYS):
 def fig7(days=QUICK_DAYS):
     rows = []
     for table in ("macknick", "wri"):
-        out = sweep(["baseline", "waterwise", "ecovisor"], days=days,
-                    tolerance=0.5, ewif_table=table)
+        out = run_cells(["baseline", "waterwise", "ecovisor"], days=days,
+                        tolerance=0.5, ewif_table=table)
         for name in ("waterwise", "ecovisor"):
             rows.append(dict(out[name], dataset=table))
     return emit(rows, ["scheduler", "dataset", "carbon_savings_pct",
@@ -74,8 +83,9 @@ def fig7(days=QUICK_DAYS):
 def fig8(days=QUICK_DAYS):
     rows = []
     for lam in (0.3, 0.5, 0.7):
-        out = sweep(["baseline", "waterwise"], days=days, tolerance=0.5,
-                    sched_kwargs=dict(lam_co2=lam, lam_h2o=1 - lam))
+        out = run_cells(
+            ["baseline", f"waterwise[lam_co2={lam},lam_h2o={1 - lam}]"],
+            days=days, tolerance=0.5)
         rows.append(dict(out["waterwise"], lam_co2=lam))
     return emit(rows, ["scheduler", "lam_co2", "carbon_savings_pct",
                        "water_savings_pct"], "fig8: weight sweep")
@@ -84,7 +94,8 @@ def fig8(days=QUICK_DAYS):
 def fig9(days=QUICK_DAYS):
     rows = []
     for tol in (0.25, 0.5):
-        out = sweep(CORE, days=min(days, 0.1), tolerance=tol, trace="alibaba")
+        out = run_cells(CORE, days=min(days, 0.1), tolerance=tol,
+                        jobs_per_day=ALIBABA_JOBS_PER_DAY, trace="alibaba")
         for name in CORE[1:]:
             rows.append(dict(out[name], tolerance=tol))
     return emit(rows, ["scheduler", "tolerance", "carbon_savings_pct",
@@ -93,8 +104,8 @@ def fig9(days=QUICK_DAYS):
 
 
 def fig10(days=QUICK_DAYS):
-    out = sweep(["baseline", "waterwise", "round-robin", "least-load"],
-                days=days, tolerance=0.5)
+    out = run_cells(["baseline", "waterwise", "round-robin", "least-load"],
+                    days=days, tolerance=0.5)
     rows = [out[n] for n in ("waterwise", "round-robin", "least-load")]
     return emit(rows, SAVE_COLS, "fig10: load-balancer comparison")
 
@@ -102,7 +113,7 @@ def fig10(days=QUICK_DAYS):
 def fig11(days=QUICK_DAYS):
     rows = []
     for util in (0.05, 0.15, 0.25):
-        out = sweep(CORE, days=days, tolerance=0.5, utilization=util)
+        out = run_cells(CORE, days=days, tolerance=0.5, utilization=util)
         for name in CORE[1:]:
             rows.append(dict(out[name], utilization=util))
     return emit(rows, ["scheduler", "utilization", "carbon_savings_pct",
@@ -120,8 +131,8 @@ def fig12(days=QUICK_DAYS):
                         if r.name in ("Zurich", "Milan", "Mumbai")],
     }
     for tag, regions in sets.items():
-        out = sweep(["baseline", "waterwise"], days=days, tolerance=0.5,
-                    regions=regions)
+        out = run_cells(["baseline", "waterwise"], days=days, tolerance=0.5,
+                        regions=regions)
         rows.append(dict(out["waterwise"], regions=tag))
     return emit(rows, ["scheduler", "regions", "carbon_savings_pct",
                        "water_savings_pct"], "fig12: region availability")
@@ -129,14 +140,17 @@ def fig12(days=QUICK_DAYS):
 
 def fig13(days=QUICK_DAYS):
     rows = []
-    for trace, mult in (("borg", 1.0), ("borg", 2.0), ("alibaba", 1.0)):
-        out = sweep(["baseline", "waterwise"], days=min(days, 0.1),
-                    trace=trace, rate_multiplier=mult, tolerance=0.5)
+    cells = (("borg", 23000.0), ("borg", 46000.0),
+             ("alibaba", ALIBABA_JOBS_PER_DAY))
+    for trace, jpd in cells:
+        out = run_cells(["baseline", "waterwise"], days=min(days, 0.1),
+                        jobs_per_day=jpd, tolerance=0.5, trace=trace,
+                        keep_result=True)
         s = out["waterwise"]
         res = s.pop("_result")
         st = res["solve_times"]
         exec_mean = np.mean([r.job.exec_time_s for r in res["records"]])
-        rows.append(dict(trace=f"{trace}x{mult:g}",
+        rows.append(dict(trace=f"{trace}@{jpd:g}/d",
                          mean_solve_ms=float(st.mean() * 1e3),
                          p99_solve_ms=float(np.percentile(st, 99) * 1e3),
                          overhead_pct=float(st.mean() / exec_mean * 100),
@@ -159,7 +173,7 @@ def fig13(days=QUICK_DAYS):
 def table2(days=QUICK_DAYS):
     rows = []
     for tol in (0.25, 0.5, 0.75, 1.0):
-        out = sweep(CORE, days=days, tolerance=tol)
+        out = run_cells(CORE, days=days, tolerance=tol)
         for name in CORE:
             rows.append(dict(scheduler=name, tolerance=tol,
                              service=out[name]["mean_service_ratio"],

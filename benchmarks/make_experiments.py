@@ -72,10 +72,10 @@ def decode_improvement_table():
 
 
 def sim_quick_summary():
-    from benchmarks.common import sweep
-    out = sweep(["baseline", "waterwise", "carbon-greedy-opt",
-                 "water-greedy-opt", "round-robin", "least-load",
-                 "ecovisor"], days=1.0, tolerance=0.5)
+    from benchmarks.common import run_cells
+    out = run_cells(["baseline", "waterwise", "carbon-greedy-opt",
+                     "water-greedy-opt", "round-robin", "least-load",
+                     "ecovisor"], days=1.0, tolerance=0.5)
     rows = ["| scheduler | carbon sav % | water sav % | service× | viol % "
             "| solve ms |", "|---|---|---|---|---|---|"]
     for name, s in out.items():

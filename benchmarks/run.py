@@ -4,10 +4,18 @@
   PYTHONPATH=src python -m benchmarks.run --full     # paper-scale traces
   PYTHONPATH=src python -m benchmarks.run --only fig5,table2
 
-Scenario sweep (event-driven engine, schedulers × scenarios cross product):
+Scenario sweep (event-driven engine, schedulers × scenarios cross product;
+``--schedulers`` takes policy-spec strings, bracketed params included):
 
   PYTHONPATH=src python -m benchmarks.run --sweep            # quick
   PYTHONPATH=src python -m benchmarks.run --sweep --full     # 100k jobs/10d
+  PYTHONPATH=src python -m benchmarks.run --sweep \\
+      --schedulers 'baseline,waterwise[lam_h2o=0.7,backend=jax]'
+
+Registries (names, accepted params, descriptions):
+
+  PYTHONPATH=src python -m benchmarks.run --list-schedulers [--markdown]
+  PYTHONPATH=src python -m benchmarks.run --list-scenarios
 """
 from __future__ import annotations
 
@@ -16,14 +24,27 @@ import os
 import time
 
 
+def list_schedulers(markdown: bool) -> None:
+    from repro import policy
+    print(policy.describe(markdown=markdown))
+
+
+def list_scenarios() -> None:
+    from repro.sim import scenarios
+    width = max(map(len, scenarios.list_scenarios()), default=0)
+    for name in scenarios.list_scenarios():
+        print(f"{name:{width}s}  {scenarios.get_scenario(name).description}")
+
+
 def run_sweep(args) -> None:
+    from repro import policy
     from repro.sim import scenarios
 
     full = args.full
     days = args.days if args.days is not None else (10.0 if full else 0.2)
     jobs_per_day = (args.jobs_per_day if args.jobs_per_day is not None
                     else (10000.0 if full else 23000.0))
-    schedulers = args.schedulers.split(",")
+    schedulers = policy.split_specs(args.schedulers)
     if args.trace_csv:
         scenarios.register_csv_scenario("csv-trace", args.trace_csv)
     names = (args.scenarios.split(",") if args.scenarios
@@ -52,7 +73,17 @@ def main() -> None:
     ap.add_argument("--scenarios", default="",
                     help="comma-separated scenario names (default: all)")
     ap.add_argument("--schedulers",
-                    default="baseline,least-load,ecovisor,waterwise")
+                    default="baseline,least-load,ecovisor,waterwise",
+                    help="comma-separated policy specs, e.g. "
+                         "'baseline,waterwise[lam_h2o=0.7,backend=jax]'")
+    ap.add_argument("--list-schedulers", action="store_true",
+                    help="print the policy registry (params, descriptions) "
+                         "and exit")
+    ap.add_argument("--list-scenarios", action="store_true",
+                    help="print the scenario registry and exit")
+    ap.add_argument("--markdown", action="store_true",
+                    help="with --list-schedulers: emit the markdown table "
+                         "embedded in README.md")
     ap.add_argument("--days", type=float, default=None)
     ap.add_argument("--jobs-per-day", type=float, default=None)
     ap.add_argument("--seed", type=int, default=0)
@@ -66,6 +97,12 @@ def main() -> None:
                          "energy_kwh,home_region)")
     args = ap.parse_args()
 
+    if args.list_schedulers:
+        list_schedulers(args.markdown)
+        return
+    if args.list_scenarios:
+        list_scenarios()
+        return
     if args.sweep:
         if args.only:
             ap.error("--only does not apply with --sweep "

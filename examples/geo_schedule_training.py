@@ -17,7 +17,6 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core import telemetry
-from repro.core.baselines import make_scheduler
 from repro.models import Model
 from repro.sim import Simulator, savings_vs, summarize
 from repro.core.problem import Job
@@ -67,9 +66,9 @@ def main():
 
     results = {}
     for name in ("baseline", "waterwise"):
-        sched = make_scheduler(name, tele)
+        # Policy-spec strings build through the registry (repro.policy).
         results[name] = summarize(Simulator(tele, cap).run(
-            copy.deepcopy(jobs), sched))
+            copy.deepcopy(jobs), name))
     sv = savings_vs(results["baseline"], results["waterwise"])
     b, w = results["baseline"], results["waterwise"]
     print(f"baseline : {b['carbon_kg']:10.1f} kg CO2  {b['water_kl']:8.1f} kL")

@@ -2,14 +2,15 @@
 
 Generates one day of per-region sustainability telemetry, replays two hours
 of a Borg-like trace through the carbon+water co-optimizing controller, and
-prints the savings against the carbon/water-unaware baseline.
+prints the savings against the carbon/water-unaware baseline. Schedulers
+are declarative policy specs (``repro.policy``) — the engine builds them
+straight from their string form.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import copy
 
 from repro.core import telemetry
-from repro.core.baselines import make_scheduler
 from repro.sim import Simulator, borg_trace, savings_vs, summarize
 from repro.sim.trace import scale_capacity_for_utilization
 
@@ -24,9 +25,9 @@ print(f"{len(jobs)} jobs over {DAYS * 24:.1f} h, "
 results = {}
 for name in ("baseline", "waterwise", "carbon-greedy-opt",
              "water-greedy-opt"):
-    sched = make_scheduler(name, tele)
+    # The engine accepts policy-spec strings directly (repro.policy).
     results[name] = summarize(Simulator(tele, capacity).run(
-        copy.deepcopy(jobs), sched))
+        copy.deepcopy(jobs), name))
 
 base = results["baseline"]
 print(f"{'scheduler':20s} {'carbon kg':>10s} {'water kL':>9s} "

@@ -1,28 +1,48 @@
-"""Scenario sweep in ~20 lines: schedulers × environmental regimes.
+"""Scenario sweep in ~30 lines: policy specs × environmental regimes.
 
-Runs a small Borg-like trace through three schedulers under three regimes —
-nominal, a drought summer (elevated WUE + scarcity), and a full outage of
-the greenest region — on the event-driven engine, then prints the tidy
-results table. The full registry (``scenarios.list_scenarios()``) and
+Runs a small Borg-like trace through three scheduling policies under three
+regimes — nominal, a drought summer (elevated WUE + scarcity), and a full
+outage of the greenest region — on the event-driven engine, then prints the
+tidy results table. Schedulers are *policy specs*: bracketed strings that
+parameterize the registry (``waterwise[lam_h2o=0.7,backend=jax]``), so the
+same flag drives any variant, and every output row carries a ``spec``
+column that rebuilds its scheduler exactly. The full registries
+(``scenarios.list_scenarios()``, ``policy.list_policies()``) and
 paper-scale traces are driven the same way:
 
   PYTHONPATH=src python examples/scenario_sweep.py
+  PYTHONPATH=src python examples/scenario_sweep.py \\
+      --schedulers 'baseline,waterwise[lam_h2o=0.7,backend=flow]'
   PYTHONPATH=src python -m benchmarks.run --sweep --full   # 100k jobs, 10d
 """
+import argparse
+
+from repro import policy
 from repro.sim import scenarios
 
-SCHEDULERS = ["baseline", "least-load", "waterwise"]
-SCENARIOS = ["nominal", "drought-summer", "capacity-loss"]
+SCHEDULERS = "baseline,least-load,waterwise"
+SCENARIOS = "nominal,drought-summer,capacity-loss"
 
 
 def main() -> None:
-    rows = scenarios.sweep(SCHEDULERS, SCENARIOS, days=0.1, seed=0)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--days", type=float, default=0.1)
+    ap.add_argument("--schedulers", default=SCHEDULERS,
+                    help="comma-separated policy specs (bracketed params OK)")
+    ap.add_argument("--scenarios", default=SCENARIOS)
+    args = ap.parse_args()
+
+    specs = policy.split_specs(args.schedulers)
+    rows = scenarios.sweep(specs, args.scenarios.split(","),
+                           days=args.days, seed=0)
     print(scenarios.to_table(rows))
-    ww = {r["scenario"]: r for r in rows if r["scheduler"] == "waterwise"}
-    for name, row in ww.items():
-        print(f"waterwise under {name}: {row['carbon_savings_pct']:.1f}% "
-              f"carbon, {row['water_savings_pct']:.1f}% water saved "
-              f"vs baseline")
+    for row in rows:
+        assert policy.parse(row["spec"])     # every row is reproducible
+        if row["scheduler"] == "baseline" or "carbon_savings_pct" not in row:
+            continue                         # savings need baseline in sweep
+        print(f"{row['spec']} under {row['scenario']}: "
+              f"{row['carbon_savings_pct']:.1f}% carbon, "
+              f"{row['water_savings_pct']:.1f}% water saved vs baseline")
 
 
 if __name__ == "__main__":

@@ -15,7 +15,6 @@ All expose ``schedule(jobs, now_s, capacity) -> Decision`` (same contract as
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import List, Sequence
 
 import numpy as np
@@ -135,7 +134,7 @@ class GreedyOpt(_RuleScheduler):
         for n in range(self.tele.num_regions):
             if free[n] <= 0:
                 continue
-            lat = telemetry.transfer_latency_s(job.package_bytes,
+            lat = self.tele.transfer_latency_s(job.package_bytes,
                                                job.home_region, n)
             earliest = now_s + lat
             if earliest > max_start + 1e-9:
@@ -189,38 +188,20 @@ class Ecovisor(_RuleScheduler):
         return n
 
 
-@dataclasses.dataclass
-class SchedulerSpec:
-    """Factory entry used by benchmarks to instantiate schedulers by name."""
-    name: str
-    make: callable
-
-
-# Schedulers that accept tuning kwargs (the sweep's ``sched_kwargs`` are
-# forwarded only to these); the forecast-driven ones additionally accept the
-# ``forecast_bias`` / ``forecast_noise`` injection of the forecast-error
-# scenario regime.
-FORECAST_SCHEDULERS = frozenset(
-    {"waterwise-forecast", "waterwise-oracle", "carbon-forecast"})
-TUNABLE_SCHEDULERS = frozenset({"waterwise"}) | FORECAST_SCHEDULERS
-
-
 def make_scheduler(name: str, tele, **kw):
-    from repro.core.controller import Controller, ForecastController
-    if name == "waterwise-oracle":
-        kw = {**kw, "forecaster": "oracle"}
-    elif name == "carbon-forecast":
-        kw = {**kw, "lam_co2": 1.0, "lam_h2o": 0.0}
-    table = {
-        "baseline": lambda: Baseline(tele),
-        "round-robin": lambda: RoundRobin(tele),
-        "least-load": lambda: LeastLoad(tele),
-        "carbon-greedy-opt": lambda: GreedyOpt(tele, "carbon"),
-        "water-greedy-opt": lambda: GreedyOpt(tele, "water"),
-        "ecovisor": lambda: Ecovisor(tele),
-        "waterwise": lambda: Controller(tele, **kw),
-        "waterwise-forecast": lambda: ForecastController(tele, **kw),
-        "waterwise-oracle": lambda: ForecastController(tele, **kw),
-        "carbon-forecast": lambda: ForecastController(tele, **kw),
-    }
-    return table[name]()
+    """Deprecated shim over the ``repro.policy`` registry.
+
+    The old lambda table (plus the ``TUNABLE_SCHEDULERS`` /
+    ``FORECAST_SCHEDULERS`` frozensets that silently dropped kwargs for
+    everything else) is replaced by the declarative ``PolicySpec`` API::
+
+        from repro import policy
+        sched = policy.build("waterwise[lam_h2o=0.7,backend=jax]", tele)
+
+    This shim parses ``name`` as a spec string (bracketed params work too)
+    and applies ``kw`` as validated overrides, so it produces bit-identical
+    schedulers to the registry path — and now *raises* on unknown names or
+    params instead of ignoring them.
+    """
+    from repro import policy
+    return policy.build(name, tele, **kw)

@@ -1,486 +1,27 @@
-"""WaterWise Optimization Decision Controller — paper §4, Algorithm 1.
+"""WaterWise Optimization Decision Controller — compatibility surface.
 
-Ties together: problem construction (Eq 8 costs, Eq 11 arc filter), the
-slack manager (Eq 14), the MILP solver with hard→soft fallback (Eqs 8-13),
-and the history learner (the λ_ref·(λ_CO2·CO2_ref + λ_H2O·H2O_ref) term).
+The controller now lives in ``repro.policy.pipeline`` as ONE composable
+``PolicyPipeline`` (Pricer × DeferralPolicy × solver backend) instead of a
+``Controller`` / ``ForecastController`` subclass pair; every scheduler
+variant is a declarative ``PolicySpec`` over that pipeline (see
+``repro.policy``). This module keeps the historical names importable:
 
-The controller is deliberately *myopic* (paper: "the scheduler cannot have
-futuristic information") — it prices every job at the current telemetry
-snapshot and lets delay tolerance + temporal variation create savings.
+  ``Controller(tele, **kw)``          -> ``reactive_pipeline`` (Algorithm 1:
+                                         snapshot pricing + defer arc)
+  ``ForecastController(tele, **kw)``  -> ``forecast_pipeline`` (forecast-
+                                         grid pricing + deferral queue)
+
+Both return a ``PolicyPipeline`` with the same attributes and the same
+``schedule(jobs, now_s, capacity) -> Decision`` protocol as before.
 """
 from __future__ import annotations
 
-import collections
-import dataclasses
-from typing import List, Optional, Sequence
+from repro.policy.pipeline import (Decision, HistoryLearner, PolicyPipeline,
+                                   forecast_pipeline, reactive_pipeline)
 
-import numpy as np
+# Historical constructor names (still used by tests and downstream code).
+Controller = reactive_pipeline
+ForecastController = forecast_pipeline
 
-from repro.core import footprint, problem, slack, solvers, telemetry
-
-
-@dataclasses.dataclass
-class Decision:
-    """One scheduling-round outcome."""
-    scheduled: List[problem.Job]       # jobs with .region set by this round
-    assign: np.ndarray                 # [len(scheduled)] region index
-    deferred: List[problem.Job]        # jobs pushed to the next round
-    solver: solvers.SolveResult
-    softened: bool
-    # Earliest instant the scheduler plans to act on a held job. The engine
-    # fast-forwards to it instead of stalling out when the fleet is idle and
-    # no arrivals remain (temporal shifting holds jobs *on purpose*).
-    wake_s: Optional[float] = None
-
-
-class HistoryLearner:
-    """Trailing-window mean of regional carbon/water intensity.
-
-    Two uses: (a) the normalized CO2_ref / H2O_ref of Eq (8) — regions that
-    have *recently* been dirty/thirsty are discouraged even if momentarily
-    attractive; (b) the raw trailing means price the *defer* arc — the
-    expected cost of waiting for a more typical hour (window=10, λ_ref=0.1
-    per §5)."""
-
-    def __init__(self, num_regions: int, window: int = 10,
-                 raw_window: int = 240):
-        self.window = window
-        self.ci = collections.deque(maxlen=window)
-        self.wi = collections.deque(maxlen=window)
-        # "Typical conditions" need a longer horizon than the Eq-8 ref term:
-        # 240 rounds ≈ 2 h at the default 30 s scheduling period. Stored as a
-        # ring buffer ([raw_window, 3, R]) — the per-round mean is one
-        # vectorized reduction instead of rebuilding arrays from a deque of
-        # dicts (this is on the simulator's per-round hot path).
-        self.raw_window = raw_window
-        self._raw = np.zeros((raw_window, 3, num_regions))
-        self._raw_n = 0          # total observations so far
-        self.num_regions = num_regions
-
-    def observe(self, snap) -> None:
-        ci, wi = snap["ci"], snap["water_intensity"]
-        self.ci.append(ci / max(ci.max(), 1e-9))
-        self.wi.append(wi / max(wi.max(), 1e-9))
-        self._raw[self._raw_n % self.raw_window, 0] = ci
-        self._raw[self._raw_n % self.raw_window, 1] = snap["ewif"]
-        self._raw[self._raw_n % self.raw_window, 2] = snap["wue"]
-        self._raw_n += 1
-
-    @property
-    def co2_ref(self) -> Optional[np.ndarray]:
-        return np.mean(self.ci, axis=0) if self.ci else None
-
-    @property
-    def h2o_ref(self) -> Optional[np.ndarray]:
-        return np.mean(self.wi, axis=0) if self.wi else None
-
-    def mean_raw(self) -> Optional[dict]:
-        if self._raw_n < 2:
-            return None
-        m = self._raw[:min(self._raw_n, self.raw_window)].mean(axis=0)
-        return dict(ci=m[0], ewif=m[1], wue=m[2])
-
-
-class Controller:
-    """Algorithm 1. ``schedule()`` is one controller invocation."""
-
-    def __init__(self, tele: telemetry.Telemetry,
-                 server: footprint.ServerSpec = None,
-                 lam_co2: float = 0.5, lam_h2o: float = 0.5,
-                 lam_ref: float = 0.1, window: int = 10,
-                 sigma: float = 10.0, backend: str = "flow",
-                 defer_margin: float = 0.02, defer_slack_s: float = 120.0,
-                 record_windows: bool = False):
-        assert abs(lam_co2 + lam_h2o - 1.0) < 1e-9, "weights must sum to 1"
-        self.tele = tele
-        self.server = server or footprint.m5_metal()
-        self.lam_co2, self.lam_h2o, self.lam_ref = lam_co2, lam_h2o, lam_ref
-        self.sigma = sigma
-        self.backend = backend
-        # Defer arc: waiting is priced at the trailing-mean cost plus a
-        # margin; only jobs with > defer_slack_s of remaining TOL budget may
-        # take it (they must still fit a later round + transfer).
-        self.defer_margin = defer_margin
-        self.defer_slack_s = defer_slack_s
-        self.history = HistoryLearner(tele.num_regions, window)
-        self.solve_times: List[float] = []
-        # Offline queued-window replay: when enabled, every solved instance
-        # (the one that produced the round's decision) is captured so the
-        # whole run can be re-solved in bulk through ``solvers.solve_many``
-        # (bucketed + vmapped Sinkhorn — one device dispatch per bucket).
-        self.record_windows = record_windows
-        self.recorded: List[dict] = []
-
-    def _record(self, cost, allowed, capacity, overrun, tol, soften) -> None:
-        if self.record_windows:
-            self.recorded.append(dict(
-                cost=np.array(cost), allowed=np.array(allowed),
-                capacity=np.array(capacity), overrun=np.array(overrun),
-                tol=np.array(tol), soften=bool(soften)))
-
-    def replay_recorded(self, backend: str = "jax") -> List[solvers.SolveResult]:
-        """Re-solve every recorded scheduling window through the batched
-        ``solvers.solve_many`` path; results come back in round order.
-
-        Hard and soft rounds are batched separately (``soften`` is a batch-
-        level flag); with the default ``jax`` backend each group buckets by
-        padded shape and runs one vmapped Sinkhorn dispatch per bucket.
-        """
-        out: List[Optional[solvers.SolveResult]] = [None] * len(self.recorded)
-        for soften in (False, True):
-            idx = [i for i, w in enumerate(self.recorded)
-                   if w["soften"] == soften]
-            if not idx:
-                continue
-            res = solvers.solve_many(
-                [self.recorded[i]["cost"] for i in idx],
-                [self.recorded[i]["allowed"] for i in idx],
-                [self.recorded[i]["capacity"] for i in idx],
-                backend=backend, soften=soften,
-                overruns=[self.recorded[i]["overrun"] for i in idx],
-                tols=[self.recorded[i]["tol"] for i in idx],
-                sigma=self.sigma)
-            for i, r in zip(idx, res):
-                out[i] = r
-        return out
-
-    # -- Algorithm 1 ---------------------------------------------------------
-
-    def schedule(self, jobs: Sequence[problem.Job], now_s: float,
-                 capacity: np.ndarray) -> Decision:
-        jobs = list(jobs)                                    # J_all (line 3)
-        if not jobs:
-            return Decision([], np.zeros(0, np.int64), [], None, False)
-
-        total_cap = int(capacity.sum())
-        deferred: List[problem.Job] = []
-        if len(jobs) > total_cap:                            # lines 5-7
-            jobs, deferred = slack.pick_most_urgent(jobs, now_s, total_cap)
-        if not jobs:
-            return Decision([], np.zeros(0, np.int64), deferred, None, False)
-
-        snap = self.tele.at(now_s)
-        inst = problem.build(jobs, self.tele, now_s, capacity, self.server,
-                             snap=snap)
-        self.history.observe(snap)
-        cost = inst.objective_matrix(self.lam_co2, self.lam_h2o, self.lam_ref,
-                                     self.history.co2_ref,
-                                     self.history.h2o_ref)
-        tol = np.array([j.tolerance for j in jobs])
-
-        # Temporal deferral arc (the delay-tolerance exploitation of paper
-        # Fig 5): one virtual column priced at the trailing-mean cost + a
-        # margin. The MILP sends a job there exactly when *now* is a worse-
-        # than-typical hour everywhere it could run — it then waits for the
-        # next round. Arc-filtered by remaining slack so tolerance is never
-        # risked.
-        N = self.tele.num_regions
-        hist = self.history.mean_raw()
-        cost_x, allowed_x, cap_x = cost, inst.allowed, np.asarray(capacity)
-        overrun_x = inst.overrun
-        if hist is not None:
-            h_co2 = footprint.job_carbon(
-                np.array([j.energy_kwh for j in jobs])[:, None],
-                np.array([j.exec_time_s for j in jobs])[:, None],
-                hist["ci"][None, :], self.server)
-            h_h2o = footprint.job_water(
-                np.array([j.energy_kwh for j in jobs])[:, None],
-                np.array([j.exec_time_s for j in jobs])[:, None],
-                snap["pue"][None, :], hist["ewif"][None, :],
-                hist["wue"][None, :], snap["wsf"][None, :], self.server)
-            h_obj = (self.lam_co2 * h_co2 / inst.co2_max[:, None]
-                     + self.lam_h2o * h_h2o / inst.h2o_max[:, None])
-            # Same λ_ref history term as the real arcs — the defer arc must
-            # be compared apples-to-apples or it is uniformly cheaper and
-            # every job waits unconditionally (no temporal signal).
-            if self.history.co2_ref is not None:
-                h_obj = h_obj + self.lam_ref * (
-                    self.lam_co2 * self.history.co2_ref
-                    + self.lam_h2o * self.history.h2o_ref)[None, :]
-            defer_cost = h_obj.min(axis=1) + self.defer_margin
-            slack_left = np.array([j.slack_budget_s(now_s) for j in jobs])
-            can_wait = slack_left > self.defer_slack_s
-            cost_x = np.concatenate([cost, defer_cost[:, None]], axis=1)
-            allowed_x = np.concatenate([inst.allowed, can_wait[:, None]],
-                                       axis=1)
-            overrun_x = np.concatenate(
-                [inst.overrun, np.zeros((len(jobs), 1))], axis=1)
-            cap_x = np.concatenate([cap_x, [len(jobs)]])
-
-        softened = len(jobs) > total_cap                     # line 7 path
-        if softened:
-            # Soft mode drops arc filters — the defer column must not be
-            # offered there (a tolerance-violating job would "wait" forever
-            # instead of paying its penalty and running).
-            res = solvers.solve(cost, inst.allowed, capacity,
-                                backend=self.backend, soften=True,
-                                overrun=inst.overrun, tol=tol,
-                                sigma=self.sigma)
-        else:
-            res = solvers.solve(cost_x, allowed_x, cap_x,
-                                backend=self.backend, soften=False,
-                                overrun=overrun_x, tol=tol, sigma=self.sigma)
-            if not res.feasible:                             # lines 10-11
-                softened = True
-                res = solvers.solve(cost, inst.allowed, capacity,
-                                    backend=self.backend, soften=True,
-                                    overrun=inst.overrun, tol=tol,
-                                    sigma=self.sigma)
-        if softened:
-            self._record(cost, inst.allowed, capacity, inst.overrun, tol,
-                         True)
-        else:
-            self._record(cost_x, allowed_x, cap_x, overrun_x, tol, False)
-        self.solve_times.append(res.solve_time_s)
-
-        placed = (res.assign >= 0) & (res.assign < N)
-        scheduled = [j for j, p in zip(jobs, placed) if p]
-        deferred += [j for j, p in zip(jobs, placed) if not p]
-        assign = res.assign[placed]
-        for j, n in zip(scheduled, assign):
-            j.region = int(n)
-        return Decision(scheduled, assign, deferred, res, softened)
-
-
-class ForecastController(Controller):
-    """Predictive spatio-temporal controller (beyond-paper subsystem).
-
-    Replaces the reactive defer *arc* with a forecast-priced defer *grid*:
-    every round solves ``jobs × (regions × horizon-slots)`` where slot 0 is
-    "run now" at the live snapshot and slots 1..S−1 are "hold until t+s·Δ"
-    priced at a forecast of (ci, ewif, wue) — Holt–Winters by default, the
-    true-future ``oracle`` for upper-bound studies. Jobs assigned a future
-    slot enter a ``DeferralQueue`` and are re-offered when their slot (or a
-    slack guard) arrives; deadline feasibility is masked, never penalized,
-    so deferral cannot cause a tolerance miss (see ``forecast.planner``).
-
-    The flattened problem is the same capacitated transportation polytope,
-    solved by the bucketed/padded Sinkhorn backend (``backend="jax"``) that
-    already amortizes compiles across rounds.
-
-    ``risk`` shades future-slot prices toward the upper quantile band
-    (risk-averse deferral under forecast uncertainty); ``forecast_bias`` /
-    ``forecast_noise`` inject systematic error for the ``forecast-error``
-    scenario regime.
-    """
-
-    def __init__(self, tele: telemetry.Telemetry, *,
-                 forecaster: str = "holtwinters", horizon_slots: int = 8,
-                 slot_s: float = 1800.0, risk: float = 0.25,
-                 defer_eps: float = 1e-3, guard_s: float = 240.0,
-                 warmup_hours: int = 96,
-                 forecast_bias: float = 1.0, forecast_noise: float = 0.0,
-                 forecast_seed: int = 0, backend: str = "jax", **kw):
-        super().__init__(tele, backend=backend, **kw)
-        from repro import forecast as fcast
-        self._fcast = fcast
-        self.forecaster_name = forecaster
-        self.horizon_slots = int(horizon_slots)
-        self.slot_s = float(slot_s)
-        # Pre-run telemetry archive: production forecasters are warm-started
-        # on months of history, but a simulation starts at t=0. The synthetic
-        # telemetry is the single period of a periodic environment
-        # (``Telemetry.at`` wraps), so its cyclic extension *is* the
-        # environment's past — the archive at simulated hour h is the
-        # ``warmup_hours`` wrapped hours ending at h. Set 0 for a cold start.
-        self.warmup_hours = int(warmup_hours)
-        self.risk = float(risk)
-        self.defer_eps = float(defer_eps)
-        self.queue = fcast.DeferralQueue(guard_s)
-        self.forecast_bias = float(forecast_bias)
-        self.forecast_noise = float(forecast_noise)
-        self.forecast_seed = int(forecast_seed)
-        # Ground truth, stacked [T, 3R]: columns [ci | ewif | wue] — one
-        # forecaster fit covers all three signals at once.
-        self._truth = np.concatenate([tele.ci, tele.ewif, tele.wue], axis=1)
-        self._fit_hour = -1
-        self._forecast = None
-        self._fitted = None
-        # Online forecast-accuracy bookkeeping (the sweep's accuracy column):
-        # each refit scores the previous forecast against the hours that have
-        # since realized.
-        self._ape_sum = 0.0
-        self._ape_n = 0
-
-    # -- forecasting ---------------------------------------------------------
-
-    def _make_forecaster(self):
-        if self.forecaster_name == "oracle":
-            f = self._fcast.Oracle(self._truth)
-        else:
-            f = self._fcast.make_forecaster(self.forecaster_name)
-        if self.forecast_bias != 1.0 or self.forecast_noise > 0.0:
-            f = self._fcast.Perturbed(f, self.forecast_bias,
-                                      self.forecast_noise,
-                                      self.forecast_seed)
-        return f
-
-    @property
-    def forecast_mape(self) -> float:
-        """Realized 1..H-hour-ahead MAPE (%) of the forecasts actually used."""
-        return 100.0 * self._ape_sum / self._ape_n if self._ape_n else 0.0
-
-    @property
-    def mean_defer_s(self) -> float:
-        return self.queue.mean_defer_s
-
-    @property
-    def deferred_jobs(self) -> int:
-        """Distinct jobs ever time-shifted (re-deferrals don't double-count)."""
-        return len(self.queue.unique_held)
-
-    def _refresh_forecast(self, now_s: float) -> None:
-        h = min(int(now_s // telemetry.HOUR), self.tele.num_hours - 1)
-        if h <= self._fit_hour:
-            return
-        if self._forecast is not None:
-            fc = self._forecast
-            for k in range(self._fit_hour + 1, h + 1):
-                lead = k - fc.issue_hour - 1
-                if 0 <= lead < fc.horizon:
-                    truth = self._truth[k % self._truth.shape[0]]
-                    pred = fc.mean[lead]
-                    self._ape_sum += float(np.mean(
-                        np.abs(pred - truth)
-                        / np.maximum(np.abs(truth), 1e-9)))
-                    self._ape_n += 1
-        T = self._truth.shape[0]
-        if self.forecaster_name == "oracle" or self.warmup_hours <= 0:
-            hist = self._truth[:h + 1]       # oracle indexes truth absolutely
-        else:
-            idx = np.arange(h - self.warmup_hours + 1, h + 1) % T
-            hist = self._truth[idx]
-        self._fitted = self._make_forecaster().fit(hist)
-        self._fit_hour = h
-        horizon_h = int(np.ceil(self.horizon_slots * self.slot_s
-                                / telemetry.HOUR)) + 1
-        self._forecast = self._predict(horizon_h)
-
-    def _predict(self, horizon_h: int):
-        fc = self._fitted.predict(horizon_h)
-        if fc.issue_hour != self._fit_hour:
-            # Re-anchor from archive-relative to absolute hours (wrapped
-            # warm-start histories end at hour ``_fit_hour`` by construction).
-            fc = dataclasses.replace(fc, issue_hour=self._fit_hour)
-        return fc
-
-    def _ensure_horizon(self, now_s: float, max_exec_s: float,
-                        last_offset_s: float) -> None:
-        """Grow the cached forecast so every execution window it will price
-        — up to [last slot start, + longest exec] — lies inside the horizon
-        (beyond it the forecast extrapolates flat, which would silently
-        de-calibrate the pricing, oracle included)."""
-        t_end = now_s + last_offset_s + max_exec_s
-        needed = int(np.ceil(t_end / telemetry.HOUR)) - self._fit_hour + 1
-        if needed > self._forecast.horizon:
-            self._forecast = self._predict(needed)
-
-    def _slot_signal_tensors(self, jobs: Sequence[problem.Job], now_s: float,
-                             offsets: np.ndarray):
-        """(ci, ewif, wue) estimates per (job, slot), each [M, S, R].
-
-        Every cell is priced at the forecast's exact time-mean over the
-        job's would-be execution window [slot_start, slot_start + exec] —
-        the simulator accounts with the integrated telemetry over the same
-        window, so "run now" and "run later" are compared on the accounting
-        footing (with the oracle forecaster planned and accounted signal
-        means coincide exactly). Future slots are shaded toward the upper
-        quantile band by ``risk`` — deferring on an uncertain forecast must
-        price the uncertainty in.
-        """
-        R = self.tele.num_regions
-        M, S = len(jobs), len(offsets)
-        exec_t = np.array([j.exec_time_s for j in jobs])
-        self._ensure_horizon(now_s, float(exec_t.max()), float(offsets[-1]))
-        t0 = np.broadcast_to(now_s + offsets[None, :], (M, S)).ravel()
-        t1 = (now_s + offsets[None, :] + exec_t[:, None]).ravel()
-        rows = self._forecast.mean_many(t0, t1)
-        if self.risk > 0.0:
-            hi = self._forecast.mean_many(t0, t1, "hi")
-            shade = self.risk * (hi - rows)
-            shade[np.arange(t0.size) % S == 0] = 0.0      # slot 0 is observed
-            rows = rows + shade
-        rows = np.maximum(rows, 1e-6)          # physical signals are positive
-        rows = rows.reshape(M, S, 3 * R)
-        return rows[..., :R], rows[..., R:2 * R], rows[..., 2 * R:]
-
-    # -- scheduling ----------------------------------------------------------
-
-    def schedule(self, jobs: Sequence[problem.Job], now_s: float,
-                 capacity: np.ndarray) -> Decision:
-        jobs = list(jobs)
-        if not jobs:
-            return Decision([], np.zeros(0, np.int64), [], None, False)
-
-        due, held = self.queue.partition(jobs, now_s)
-        if not due:
-            return Decision([], np.zeros(0, np.int64), held, None, False,
-                            wake_s=self.queue.next_release_s())
-
-        total_cap = int(capacity.sum())
-        deferred: List[problem.Job] = []
-        if len(due) > total_cap:                             # lines 5-7
-            due, deferred = slack.pick_most_urgent(due, now_s, total_cap)
-        if not due:
-            return Decision([], np.zeros(0, np.int64), deferred + held, None,
-                            False, wake_s=self.queue.next_release_s())
-
-        snap = self.tele.at(now_s)
-        self.history.observe(snap)
-        self._refresh_forecast(now_s)
-        inst = problem.build(due, self.tele, now_s, capacity, self.server,
-                             snap=snap)
-        tol = np.array([j.tolerance for j in due])
-
-        offsets = np.arange(self.horizon_slots) * self.slot_s
-        ci, ewif, wue = self._slot_signal_tensors(due, now_s, offsets)
-        plan = self._fcast.build_temporal_plan(
-            inst, now_s, ci, ewif, wue, snap["pue"], snap["wsf"], offsets,
-            self.server, self.lam_co2, self.lam_h2o, self.lam_ref,
-            self.history.co2_ref, self.history.h2o_ref,
-            defer_eps=self.defer_eps, guard_s=self.queue.guard_s)
-
-        softened = False
-        res = solvers.solve(plan.cost, plan.allowed, plan.capacity,
-                            backend=self.backend, soften=False,
-                            sigma=self.sigma)
-        if res.feasible:
-            self._record(plan.cost, plan.allowed, plan.capacity,
-                         np.tile(inst.overrun, (1, plan.num_slots)), tol,
-                         False)
-        else:
-            # Soft fallback is slot-0 only: a job that must overrun its
-            # tolerance should pay the Eq 12-13 penalty and run *now*, not
-            # hide in a future slot.
-            softened = True
-            cost0 = inst.objective_matrix(self.lam_co2, self.lam_h2o,
-                                          self.lam_ref, self.history.co2_ref,
-                                          self.history.h2o_ref)
-            res = solvers.solve(cost0, inst.allowed, capacity,
-                                backend=self.backend, soften=True,
-                                overrun=inst.overrun, tol=tol,
-                                sigma=self.sigma)
-            self._record(cost0, inst.allowed, capacity, inst.overrun, tol,
-                         True)
-        self.solve_times.append(res.solve_time_s)
-
-        N = plan.num_regions
-        scheduled: List[problem.Job] = []
-        assign: List[int] = []
-        for j, col in zip(due, res.assign):
-            col = int(col)
-            if col < 0:
-                deferred.append(j)
-                continue
-            s, n = (0, col) if softened else plan.decode(col)
-            if s == 0:
-                j.region = n
-                scheduled.append(j)
-                assign.append(n)
-            else:
-                self.queue.hold(j, now_s + float(plan.slot_offsets[s]),
-                                now_s)
-                deferred.append(j)
-        deferred += held
-        return Decision(scheduled, np.asarray(assign, np.int64), deferred,
-                        res, softened, wake_s=self.queue.next_release_s())
+__all__ = ["Controller", "Decision", "ForecastController", "HistoryLearner",
+           "PolicyPipeline", "forecast_pipeline", "reactive_pipeline"]

@@ -100,7 +100,9 @@ def latency_matrix(home: np.ndarray, size_bytes: np.ndarray,
 
     Vectorized equivalent of ``telemetry.transfer_latency_s`` over a job
     batch (zero on the home arc). Shared by the cost-matrix builder, the
-    slack manager, and the temporal planner.
+    slack manager, and the temporal planner. Callers holding a
+    ``Telemetry`` should pass its identity-mapped ``wan_bw_gbps`` /
+    ``wan_rtt_s`` tables; the defaults are the full global tables.
     """
     if bw_gbps is None:
         bw_gbps = telemetry.WAN_BW_GBPS
@@ -141,7 +143,9 @@ def build(jobs: Sequence[Job], tele: telemetry.Telemetry, now_s: float,
                               snap["ewif"][None, :], snap["wue"][None, :],
                               snap["wsf"][None, :], server)
 
-    lat = latency_matrix(home, size, bw_gbps)
+    lat = latency_matrix(home, size,
+                         bw_gbps if bw_gbps is not None else tele.wan_bw_gbps,
+                         tele.wan_rtt_s)
 
     # Eq (11) with slack accounting: the fraction of tolerance already burnt
     # by queue-waiting plus what the transfer would burn.

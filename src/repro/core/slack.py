@@ -22,18 +22,21 @@ from repro.core.problem import Job, latency_matrix
 
 
 def urgency(jobs: Sequence[Job], now_s: float,
-            bw_gbps: np.ndarray = None) -> np.ndarray:
+            bw_gbps: np.ndarray = None,
+            rtt_s: np.ndarray = None) -> np.ndarray:
     """Eq (14) urgency score per job (seconds of remaining slack).
 
     One vectorized latency-matrix evaluation instead of a per-job Python
     loop — this runs on every congested scheduling round (Algorithm 1
-    lines 5-7), where the pending set is by definition large.
+    lines 5-7), where the pending set is by definition large. Pass the
+    telemetry's identity-mapped WAN tables (``tele.wan_bw_gbps`` /
+    ``tele.wan_rtt_s``) so region-subset runs rank with the right links.
     """
     if not jobs:
         return np.zeros(0)
     home = np.array([j.home_region for j in jobs])
     size = np.array([j.package_bytes for j in jobs])
-    l_avg = latency_matrix(home, size, bw_gbps).mean(axis=1)
+    l_avg = latency_matrix(home, size, bw_gbps, rtt_s).mean(axis=1)
     waited = np.maximum(
         now_s - np.array([j.submit_time_s for j in jobs]), 0.0)
     tol_budget = np.array([j.tolerance * j.exec_time_s for j in jobs])
@@ -41,11 +44,12 @@ def urgency(jobs: Sequence[Job], now_s: float,
 
 
 def pick_most_urgent(jobs: Sequence[Job], now_s: float, k: int,
-                     bw_gbps: np.ndarray = None):
+                     bw_gbps: np.ndarray = None,
+                     rtt_s: np.ndarray = None):
     """Split ``jobs`` into (top-k most urgent, deferred) per Eq 14 ranking."""
     if len(jobs) <= k:
         return list(jobs), []
-    u = urgency(jobs, now_s, bw_gbps)
+    u = urgency(jobs, now_s, bw_gbps, rtt_s)
     order = np.argsort(u, kind="stable")      # ascending = most urgent first
     take = set(order[:k].tolist())
     chosen = [j for i, j in enumerate(jobs) if i in take]

@@ -205,6 +205,14 @@ class Telemetry:
     pue: np.ndarray
     hours: np.ndarray
     wb_c: Optional[np.ndarray] = None
+    # [R, R] WAN tables for *this* telemetry's regions. ``generate`` slices
+    # the global tables by region identity (name lookup), so ablation runs
+    # on a non-prefix subset — e.g. {Zurich, Milan, Mumbai} — price a
+    # Zurich→Mumbai transfer with Mumbai's bandwidth/RTT, not whatever
+    # region happens to occupy the same local index. None falls back to the
+    # leading-N slice of the global tables.
+    bw_gbps: Optional[np.ndarray] = None
+    rtt_s: Optional[np.ndarray] = None
 
     @property
     def num_hours(self) -> int:
@@ -213,6 +221,28 @@ class Telemetry:
     @property
     def num_regions(self) -> int:
         return self.ci.shape[1]
+
+    @property
+    def wan_bw_gbps(self) -> np.ndarray:
+        if self.bw_gbps is not None:
+            return self.bw_gbps
+        return WAN_BW_GBPS[:self.num_regions, :self.num_regions]
+
+    @property
+    def wan_rtt_s(self) -> np.ndarray:
+        if self.rtt_s is not None:
+            return self.rtt_s
+        return WAN_RTT_S[:self.num_regions, :self.num_regions]
+
+    def transfer_latency_s(self, bytes_: float, src: int, dst: int,
+                           fixed_overhead_s: float = 2.0) -> float:
+        """Region-identity-aware variant of module-level
+        ``transfer_latency_s`` — schedulers and engines must price transfers
+        with *this* telemetry's WAN tables so subset runs stay consistent."""
+        if src == dst:
+            return 0.0
+        bw = max(self.wan_bw_gbps[src, dst] * 1e9, 1.0)
+        return fixed_overhead_s + self.wan_rtt_s[src, dst] + bytes_ / bw
 
     @property
     def water_intensity(self) -> np.ndarray:
@@ -385,5 +415,23 @@ def generate(days: int = 10, seed: int = 0, ewif_table: str = "macknick",
         wue[:, ri] = wue_from_wetbulb(t_wb)
         wb[:, ri] = t_wb
 
+    # WAN tables by region *identity*: known region names map to their rows
+    # in the global tables (so non-prefix subsets keep the right pairs);
+    # unknown/custom regions borrow a not-yet-used global row as a proxy.
+    # Any off-diagonal cell two regions end up sharing (only possible with
+    # > len(REGIONS) custom regions) would land on the unused zero diagonal,
+    # so those cells are patched to the fleet-typical link instead.
+    used = {REGION_INDEX[r.name] for r in regions if r.name in REGION_INDEX}
+    free = iter(i for i in range(len(REGIONS)) if i not in used)
+    ids = np.array([REGION_INDEX[r.name] if r.name in REGION_INDEX
+                    else next(free, i % len(REGIONS))
+                    for i, r in enumerate(regions)])
+    bw_sub = WAN_BW_GBPS[np.ix_(ids, ids)].copy()
+    rtt_sub = WAN_RTT_S[np.ix_(ids, ids)].copy()
+    off_diag = ~np.eye(len(ids), dtype=bool)
+    degenerate = off_diag & (bw_sub <= 0.0)
+    if degenerate.any():
+        bw_sub[degenerate] = float(WAN_BW_GBPS[WAN_BW_GBPS > 0].mean())
+        rtt_sub[degenerate] = float(WAN_RTT_S[WAN_RTT_S > 0].mean())
     return Telemetry(ci=ci, ewif=ewif, wue=wue, wsf=wsf, pue=pue, hours=hours,
-                     wb_c=wb)
+                     wb_c=wb, bw_gbps=bw_sub, rtt_s=rtt_sub)

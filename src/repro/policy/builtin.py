@@ -1,0 +1,161 @@
+"""Built-in policy registrations: the paper's scheduler family as specs.
+
+Param schemas for the pipeline-backed policies are *derived* from the
+factory signatures (``reactive_pipeline`` / ``forecast_pipeline``), so a new
+tunable added to a factory is automatically spec-addressable and the
+documented defaults can never drift from the code. Rule-based baselines
+declare their (few) params by hand.
+
+The rule schedulers themselves are imported lazily inside the factories —
+``repro.core.baselines`` imports the pipeline module, so importing it here
+at module scope would cycle.
+"""
+from __future__ import annotations
+
+import inspect
+from typing import Dict, List, Sequence
+
+from repro.policy.pipeline import forecast_pipeline, reactive_pipeline
+from repro.policy.registry import Param, register_policy
+
+_HELP: Dict[str, str] = {
+    "lam_co2": "carbon weight λ_CO2 (λ_CO2 + λ_H2O must sum to 1; "
+               "specifying only one sets the other to its complement)",
+    "lam_h2o": "water weight λ_H2O (complement rule as for lam_co2)",
+    "lam_ref": "history-term weight λ_ref (Eq 8)",
+    "window": "history-learner trailing window (rounds)",
+    "sigma": "soft-violation penalty σ (Eqs 12-13)",
+    "backend": "solver backend (flow / jax / scipy / pulp)",
+    "defer_margin": "defer-arc price margin over the trailing-mean cost",
+    "defer_slack_s": "min remaining TOL budget (s) to offer the defer arc",
+    "record_windows": "record every solved window for offline batched replay",
+    "forecaster": "forecast model (holtwinters / seasonal-naive / "
+                  "persistence / oracle)",
+    "horizon_slots": "number of future slots offered per round",
+    "slot_s": "slot width (seconds)",
+    "risk": "shade future slots toward the upper quantile band by this "
+            "fraction",
+    "defer_eps": "per-slot tie-break cost — deferral must earn its delay",
+    "guard_s": "tolerance budget reserve forcing early release of held jobs",
+    "warmup_hours": "telemetry archive hours used to warm-start the "
+                    "forecaster (0 = cold start)",
+    "forecast_bias": "multiplicative forecast error injection (1.0 = off)",
+    "forecast_noise": "relative forecast noise injection (0.0 = off)",
+    "forecast_seed": "seed for the injected forecast noise",
+}
+
+# Constructor arguments that are not spec-addressable (non-serializable or
+# simulator-internal).
+_NON_SPEC = {"tele", "server"}
+
+
+def _sig_params(fn, exclude: Sequence[str] = ()) -> List[Param]:
+    """Derive a Param list from a factory's keyword-only signature."""
+    out: List[Param] = []
+    skip = _NON_SPEC | set(exclude)
+    for p in inspect.signature(fn).parameters.values():
+        if (p.name in skip or p.kind is not inspect.Parameter.KEYWORD_ONLY
+                or p.default is inspect.Parameter.empty):
+            continue
+        out.append(Param(p.name, type(p.default), p.default,
+                         _HELP.get(p.name, "")))
+    return out
+
+
+# -- rule-based comparison schedulers (paper §5) ----------------------------
+
+@register_policy("baseline",
+                 "home region, carbon/water-unaware (paper's reference)")
+def _baseline(tele):
+    from repro.core.baselines import Baseline
+    return Baseline(tele)
+
+
+@register_policy("round-robin",
+                 "cyclic region placement, sustainability-unaware")
+def _round_robin(tele):
+    from repro.core.baselines import RoundRobin
+    return RoundRobin(tele)
+
+
+@register_policy("least-load",
+                 "most-free-capacity region, sustainability-unaware")
+def _least_load(tele):
+    from repro.core.baselines import LeastLoad
+    return LeastLoad(tele)
+
+
+@register_policy("carbon-greedy-opt",
+                 "infeasible oracle: knows future carbon intensity, "
+                 "delays/moves each job to its per-job best slot")
+def _carbon_greedy(tele):
+    from repro.core.baselines import GreedyOpt
+    return GreedyOpt(tele, "carbon")
+
+
+@register_policy("water-greedy-opt",
+                 "infeasible oracle: knows future water intensity, "
+                 "delays/moves each job to its per-job best slot")
+def _water_greedy(tele):
+    from repro.core.baselines import GreedyOpt
+    return GreedyOpt(tele, "water")
+
+
+@register_policy("ecovisor",
+                 "home-region carbon scaler (customized [50]): resource-"
+                 "scales jobs against a trailing carbon-intensity target",
+                 params=[Param("window", int, 24,
+                               "trailing carbon-target window (hours)")])
+def _ecovisor(tele, **p):
+    from repro.core.baselines import Ecovisor
+    return Ecovisor(tele, **p)
+
+
+# -- pipeline-backed policies -----------------------------------------------
+
+def _complete_lams(p: Dict) -> Dict:
+    """Specifying one of the Eq-8 weights implies the other (they must sum
+    to 1), so ``waterwise[lam_h2o=0.7]`` is a complete spec."""
+    if "lam_h2o" in p and "lam_co2" not in p:
+        p = dict(p, lam_co2=1.0 - p["lam_h2o"])
+    elif "lam_co2" in p and "lam_h2o" not in p:
+        p = dict(p, lam_h2o=1.0 - p["lam_co2"])
+    return p
+
+
+@register_policy("waterwise",
+                 "the paper's myopic carbon+water co-optimizing controller "
+                 "(Algorithm 1): snapshot pricing + defer arc + MILP",
+                 params=_sig_params(reactive_pipeline))
+def _waterwise(tele, **p):
+    return reactive_pipeline(tele, **_complete_lams(p))
+
+
+@register_policy("waterwise-forecast",
+                 "forecast-driven temporal shifting: jobs x (regions x "
+                 "horizon-slots) priced by a Holt-Winters forecast",
+                 params=_sig_params(forecast_pipeline),
+                 forecast_driven=True)
+def _waterwise_forecast(tele, **p):
+    return forecast_pipeline(tele, **_complete_lams(p))
+
+
+@register_policy("waterwise-oracle",
+                 "upper-bound variant: temporal shifting priced by the "
+                 "true future telemetry",
+                 params=_sig_params(forecast_pipeline,
+                                    exclude=("forecaster",)),
+                 forecast_driven=True)
+def _waterwise_oracle(tele, **p):
+    return forecast_pipeline(tele, forecaster="oracle",
+                             **_complete_lams(p))
+
+
+@register_policy("carbon-forecast",
+                 "carbon-only forecast shifting (λ_CO2=1): the "
+                 "GreenCourier-style comparison point",
+                 params=_sig_params(forecast_pipeline,
+                                    exclude=("lam_co2", "lam_h2o")),
+                 forecast_driven=True)
+def _carbon_forecast(tele, **p):
+    return forecast_pipeline(tele, lam_co2=1.0, lam_h2o=0.0, **p)

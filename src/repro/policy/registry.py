@@ -1,0 +1,158 @@
+"""Policy registry: ``@register_policy`` + typed param schemas.
+
+Replaces the old ``baselines.make_scheduler`` lambda table and the
+``TUNABLE_SCHEDULERS`` / ``FORECAST_SCHEDULERS`` frozensets: every scheduler
+is registered once with a description and a parameter schema, unknown names
+and params fail fast with a did-you-mean message (nothing is silently
+dropped any more), and any registered policy can be built from a
+``PolicySpec`` — or its string form — anywhere a scheduler is accepted.
+"""
+from __future__ import annotations
+
+import dataclasses
+import difflib
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
+
+from repro.policy.spec import (ParamValueError, PolicySpec, UnknownParamError,
+                               UnknownPolicyError, coerce_value, format_value,
+                               parse_raw)
+
+SpecLike = Union[str, PolicySpec]
+
+
+@dataclasses.dataclass(frozen=True)
+class Param:
+    """One typed, documented policy parameter (default lives here purely as
+    documentation — the factory's own signature stays the source of truth,
+    and builders receive only explicitly overridden keys)."""
+    name: str
+    type: type
+    default: object
+    help: str = ""
+
+    def describe(self) -> str:
+        return (f"{self.name}={format_value(self.default)}"
+                f":{self.type.__name__}")
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicyEntry:
+    """A registered scheduling policy."""
+    name: str
+    description: str
+    params: Dict[str, Param]
+    factory: Callable                 # (tele, **explicit_params) -> scheduler
+    # Forecast-driven policies accept the scenario sweep's forecast-error
+    # injection (forecast_bias / forecast_noise / forecast_seed defaults).
+    forecast_driven: bool = False
+
+    def make_spec(self, **params) -> PolicySpec:
+        """Validated, coerced ``PolicySpec`` for this policy."""
+        out = {}
+        for key, raw in params.items():
+            p = self.params.get(key)
+            if p is None:
+                raise UnknownParamError(self._unknown_param_msg(key))
+            out[key] = coerce_value(raw, p.type, policy=self.name, key=key)
+        return PolicySpec(self.name, out)
+
+    def build(self, tele, spec: PolicySpec):
+        return self.factory(tele, **dict(spec.params))
+
+    def _unknown_param_msg(self, key: str) -> str:
+        if not self.params:
+            return (f"policy {self.name!r} accepts no parameters "
+                    f"(got {key!r})")
+        hint = difflib.get_close_matches(key, self.params, n=1)
+        did = f" — did you mean {hint[0]!r}?" if hint else ""
+        return (f"unknown parameter {key!r} for policy {self.name!r}{did} "
+                f"(accepts: {', '.join(self.params)})")
+
+
+_REGISTRY: Dict[str, PolicyEntry] = {}
+
+
+def register_policy(name: str, description: str,
+                    params: Sequence[Param] = (),
+                    forecast_driven: bool = False):
+    """Decorator: register ``fn(tele, **params) -> scheduler`` under ``name``."""
+    def deco(fn):
+        _REGISTRY[name] = PolicyEntry(
+            name=name, description=description,
+            params={p.name: p for p in params}, factory=fn,
+            forecast_driven=forecast_driven)
+        return fn
+    return deco
+
+
+def _ensure_builtins() -> None:
+    # Import side-effect registration (lazy to keep the package import-cycle
+    # free: builtin pulls in the rule schedulers which import the pipeline).
+    if "waterwise" not in _REGISTRY:
+        from repro.policy import builtin  # noqa: F401
+
+
+def get_policy(name: str) -> PolicyEntry:
+    _ensure_builtins()
+    entry = _REGISTRY.get(name)
+    if entry is None:
+        hint = difflib.get_close_matches(name, _REGISTRY, n=1)
+        did = f" — did you mean {hint[0]!r}?" if hint else ""
+        raise UnknownPolicyError(
+            f"unknown policy {name!r}{did} (have: "
+            f"{', '.join(sorted(_REGISTRY))})")
+    return entry
+
+
+def list_policies() -> List[str]:
+    _ensure_builtins()
+    return sorted(_REGISTRY)
+
+
+def parse(text: SpecLike) -> PolicySpec:
+    """Parse + validate a spec string against the registry.
+
+    Accepts an existing ``PolicySpec`` too (re-validated), so every consumer
+    can take either form.
+    """
+    if isinstance(text, PolicySpec):
+        return get_policy(text.name).make_spec(**text.params)
+    name, raw = parse_raw(text)
+    return get_policy(name).make_spec(**raw)
+
+
+as_spec = parse     # readability alias: as_spec("waterwise[...]") / (spec)
+
+
+def build(spec: SpecLike, tele, **overrides):
+    """Instantiate the scheduler a spec describes, against ``tele``.
+
+    ``overrides`` are merged on top of the spec's params (validated), which
+    is what the deprecated ``make_scheduler(name, tele, **kw)`` shim
+    forwards to.
+    """
+    s = parse(spec)
+    if overrides:
+        s = s.with_params(**overrides)
+    return get_policy(s.name).build(tele, s)
+
+
+def describe(markdown: bool = False) -> str:
+    """Human-readable registry dump (the ``--list-schedulers`` surface and
+    the source of the README scheduler table)."""
+    _ensure_builtins()
+    entries = [_REGISTRY[n] for n in sorted(_REGISTRY)]
+    if markdown:
+        lines = ["| policy | parameters | description |", "|---|---|---|"]
+        for e in entries:
+            ps = ", ".join(f"`{p.describe()}`" for p in e.params.values()) \
+                or "—"
+            lines.append(f"| `{e.name}` | {ps} | {e.description} |")
+        return "\n".join(lines)
+    lines = []
+    for e in entries:
+        lines.append(f"{e.name:20s} {e.description}")
+        for p in e.params.values():
+            doc = f"  — {p.help}" if p.help else ""
+            lines.append(f"    {p.describe():28s}{doc}")
+    return "\n".join(lines)

@@ -1,5 +1,12 @@
 """Discrete-event simulation engine — replays a trace through a scheduler.
 
+Schedulers are anything satisfying the uniform ``repro.policy.Scheduler``
+protocol — ``schedule(jobs, now_s, capacity) -> Decision`` — which every
+registry policy (rule baselines, the reactive pipeline, the forecast
+pipeline) implements. ``run()`` also accepts a declarative policy spec
+(``"waterwise[lam_h2o=0.7,backend=jax]"`` or a ``repro.policy.PolicySpec``)
+and builds it against the engine's telemetry.
+
 Two engines share one contract (``run(jobs, scheduler) -> result dict``):
 
 ``EventSimulator`` (the default ``Simulator``) is event-driven: it holds a
@@ -83,6 +90,16 @@ class JobRecord:
 CapacityEvent = Tuple[float, object]
 
 
+def resolve_scheduler(scheduler, tele):
+    """Materialize ``scheduler`` against ``tele``: policy-spec strings and
+    ``PolicySpec`` objects are built through the registry; anything already
+    satisfying the ``schedule()`` protocol passes through untouched."""
+    from repro import policy
+    if isinstance(scheduler, (str, policy.PolicySpec)):
+        return policy.build(scheduler, tele)
+    return scheduler
+
+
 def resolve_capacity(payload, base: np.ndarray) -> np.ndarray:
     """Materialize a capacity-event payload against the base capacity."""
     if isinstance(payload, tuple) and len(payload) == 2 \
@@ -138,6 +155,7 @@ class EventSimulator:
     # -- main loop -----------------------------------------------------------
 
     def run(self, jobs: Sequence[Job], scheduler) -> Dict:
+        scheduler = resolve_scheduler(scheduler, self.tele)
         w = self.cfg.window_s
         jobs = sorted(jobs, key=lambda j: j.submit_time_s)
         n_jobs = len(jobs)
@@ -169,7 +187,7 @@ class EventSimulator:
                 progressed = bool(dec.scheduled)
                 for job, n in zip(dec.scheduled, dec.assign):
                     n = int(n)
-                    lat = telemetry.transfer_latency_s(job.package_bytes,
+                    lat = self.tele.transfer_latency_s(job.package_bytes,
                                                        job.home_region, n)
                     start = now + lat
                     if job.planned_start_s is not None:
@@ -275,6 +293,7 @@ class WindowedSimulator:
     # -- main loop -----------------------------------------------------------
 
     def run(self, jobs: Sequence[Job], scheduler) -> Dict:
+        scheduler = resolve_scheduler(scheduler, self.tele)
         jobs = sorted(jobs, key=lambda j: j.submit_time_s)
         cluster = Cluster(self.capacity)
         records: List[JobRecord] = []
@@ -295,7 +314,7 @@ class WindowedSimulator:
                 progressed = bool(dec.scheduled)
                 for job, n in zip(dec.scheduled, dec.assign):
                     n = int(n)
-                    lat = telemetry.transfer_latency_s(job.package_bytes,
+                    lat = self.tele.transfer_latency_s(job.package_bytes,
                                                        job.home_region, n)
                     start = now + lat
                     if job.planned_start_s is not None:

@@ -13,7 +13,10 @@ shifting policies across regions/seasons; Wu et al. show water rankings flip
 under water-stress weighting). This module makes those regimes first-class:
 ``sweep(schedulers, scenarios)`` runs the full cross product on the
 event-driven engine — optionally fanned out across worker processes — and
-returns one tidy row per (scenario, scheduler) cell.
+returns one tidy row per (scenario, scheduler) cell. Schedulers are
+declarative policy specs (``repro.policy``): strings like
+``"waterwise-forecast[horizon_slots=8]"`` work anywhere, and every row's
+``spec`` column re-parses to the exact policy that produced it.
 
 Adding a scenario::
 
@@ -136,17 +139,21 @@ def decarbonize(tele: telemetry.Telemetry, regions: Sequence[int],
 
 def _base(days: float, seed: int, jobs_per_day: float, utilization: float,
           *, trace: str = "borg", tolerance: float = 0.5,
-          ewif_table: str = "macknick") -> ScenarioInstance:
+          ewif_table: str = "macknick",
+          regions: Optional[Sequence] = None) -> ScenarioInstance:
     tele = telemetry.generate(days=max(int(np.ceil(days)) + 1, 2), seed=seed,
-                              ewif_table=ewif_table)
+                              ewif_table=ewif_table,
+                              regions=regions or tuple(telemetry.REGIONS))
     if trace == "borg":
         jobs = borg_trace(days=days, seed=seed, tolerance=tolerance,
+                          num_regions=tele.num_regions,
                           target_jobs_per_day=jobs_per_day)
     else:
         # Alibaba keeps its 8.5× burst shape; the multiplier rescales the
         # absolute rate to the requested jobs/day.
         mult = jobs_per_day / (8.5 * 23000.0)
         jobs = alibaba_trace(days=days, seed=seed, tolerance=tolerance,
+                             num_regions=tele.num_regions,
                              rate_multiplier=mult)
     cap = scale_capacity_for_utilization(jobs, days, tele.num_regions,
                                          utilization)
@@ -308,45 +315,63 @@ def register_csv_scenario(name: str, path: str, *,
 # Sweep runner
 # ---------------------------------------------------------------------------
 
-def run_cell(scenario: str, scheduler: str, *, days: float = 0.2,
+def run_cell(scenario: str, scheduler, *, days: float = 0.2,
              seed: int = 0, jobs_per_day: float = 23000.0,
              utilization: float = 0.15, window_s: float = 30.0,
              tolerance: Optional[float] = None,
-             sched_kwargs: Optional[Dict] = None) -> Dict:
+             sched_kwargs: Optional[Dict] = None,
+             build_kwargs: Optional[Dict] = None,
+             return_result: bool = False) -> Dict:
     """Build one scenario instance, run one scheduler through it, and return
     a tidy result row. Deterministic in its arguments; safe to run in a
     worker process (everything is rebuilt from primitives).
 
+    ``scheduler`` is a policy spec — a ``repro.policy.PolicySpec`` or its
+    string form (``"waterwise[lam_h2o=0.7,backend=jax]"``). ``sched_kwargs``
+    are merged into the spec as validated overrides: unknown or ill-typed
+    params raise with a did-you-mean message for *every* policy (nothing is
+    silently dropped any more). The row's ``spec`` column is the fully
+    resolved spec string — re-parsing it reproduces the cell's scheduler
+    exactly, so any sweep CSV line is self-describing.
+
     ``tolerance`` overrides the builders' default delay tolerance (the
-    temporal-shifting dimension: TOL×exec_time of slack per job);
-    ``sched_kwargs`` reaches only the tunable schedulers (waterwise + the
-    forecast variants). Forecast-driven schedulers additionally report
+    temporal-shifting dimension: TOL×exec_time of slack per job) and
+    ``build_kwargs`` forwards further builder kwargs (``trace``,
+    ``ewif_table``, ``regions``, ... — whatever the scenario's builder
+    accepts). Forecast-driven policies additionally report
     ``forecast_mape`` (realized % error of the forecasts they acted on),
-    ``mean_defer_s`` (average intentional hold), and ``deferred_pct``.
+    ``mean_defer_s`` (average intentional hold), and ``deferred_pct``;
+    scenarios with a forecast-error regime inject their bias/noise into
+    the spec (visible in the ``spec`` column). ``return_result=True``
+    attaches the raw engine result dict as ``row["_result"]`` (in-process
+    use only; never serialized into sweep CSVs).
     """
+    from repro import policy
     from repro.core import solvers
-    from repro.core.baselines import (FORECAST_SCHEDULERS, TUNABLE_SCHEDULERS,
-                                      make_scheduler)
 
     solvers.available_backends()     # one-time backend imports, off the clock
-    build_kw = {} if tolerance is None else {"tolerance": tolerance}
+    spec = policy.as_spec(scheduler)
+    if sched_kwargs:
+        spec = spec.with_params(**sched_kwargs)
+    build_kw = dict(build_kwargs or {})
+    if tolerance is not None:
+        build_kw["tolerance"] = tolerance
     inst = get_scenario(scenario).build(days, seed, jobs_per_day, utilization,
                                         **build_kw)
-    kw = dict(sched_kwargs) if (sched_kwargs
-                                and scheduler in TUNABLE_SCHEDULERS) else {}
-    if scheduler in FORECAST_SCHEDULERS \
+    if policy.get_policy(spec.name).forecast_driven \
             and (inst.forecast_bias != 1.0 or inst.forecast_noise > 0.0):
-        kw.setdefault("forecast_bias", inst.forecast_bias)
-        kw.setdefault("forecast_noise", inst.forecast_noise)
-        kw.setdefault("forecast_seed", seed)
-    sched = make_scheduler(scheduler, inst.tele, **kw)
+        spec = spec.with_defaults(forecast_bias=inst.forecast_bias,
+                                  forecast_noise=inst.forecast_noise,
+                                  forecast_seed=seed)
+    sched = policy.build(spec, inst.tele)
     sim = EventSimulator(inst.tele, inst.capacity,
                          SimConfig(window_s=window_s),
                          capacity_events=inst.capacity_events)
     t0 = time.perf_counter()
     result = sim.run(inst.jobs, sched)
     wall = time.perf_counter() - t0
-    row = dict(scenario=scenario, scheduler=scheduler, **summarize(result))
+    row = dict(scenario=scenario, scheduler=spec.name, spec=str(spec),
+               **summarize(result))
     row["wall_s"] = wall
     row["unfinished"] = result["unfinished"]
     weight = (inst.water_weight if inst.water_weight is not None
@@ -358,10 +383,12 @@ def run_cell(scenario: str, scheduler: str, *, days: float = 0.2,
         row["mean_defer_s"] = float(sched.mean_defer_s)
         row["deferred_pct"] = (100.0 * sched.deferred_jobs
                                / max(len(inst.jobs), 1))
+    if return_result:
+        row["_result"] = result
     return row
 
 
-def sweep(schedulers: Sequence[str], scenarios: Optional[Sequence[str]] = None,
+def sweep(schedulers: Sequence, scenarios: Optional[Sequence[str]] = None,
           *, days: float = 0.2, seed: int = 0,
           jobs_per_day: float = 23000.0, utilization: float = 0.15,
           window_s: float = 30.0, tolerance: Optional[float] = None,
@@ -369,16 +396,21 @@ def sweep(schedulers: Sequence[str], scenarios: Optional[Sequence[str]] = None,
           max_workers: Optional[int] = None) -> List[Dict]:
     """Run the schedulers × scenarios cross product; one tidy row per cell.
 
-    ``max_workers > 1`` fans cells out over worker processes (each cell is
-    independent and deterministic, so parallel and serial sweeps produce
-    identical rows). Defaults to the CPU count capped by the cell count.
-    Within each scenario, savings percentages are attached relative to the
-    ``baseline`` scheduler when it is part of the sweep.
+    ``schedulers`` are policy specs — strings like
+    ``"waterwise-forecast[horizon_slots=8]"`` or ``PolicySpec`` objects —
+    validated up front so a typo'd policy or param fails before any cell
+    runs. ``max_workers > 1`` fans cells out over worker processes (each
+    cell is independent and deterministic, so parallel and serial sweeps
+    produce identical rows). Defaults to the CPU count capped by the cell
+    count. Within each scenario, savings percentages are attached relative
+    to the ``baseline`` scheduler when it is part of the sweep.
     """
+    from repro import policy
     scenarios = list(scenarios) if scenarios is not None else list_scenarios()
     for s in scenarios:
         get_scenario(s)          # fail fast on typos
-    cells = [(sc, sd) for sc in scenarios for sd in schedulers]
+    specs = [policy.as_spec(s) for s in schedulers]   # fail fast on typos
+    cells = [(sc, sd) for sc in scenarios for sd in specs]
     kw = dict(days=days, seed=seed, jobs_per_day=jobs_per_day,
               utilization=utilization, window_s=window_s,
               tolerance=tolerance, sched_kwargs=sched_kwargs)
@@ -415,7 +447,8 @@ _TABLE_COLS = ("scenario", "scheduler", "jobs", "unfinished", "carbon_kg",
                "wall_s")
 _CSV_COLS = _TABLE_COLS + ("stress_water_savings_pct", "p99_service_ratio",
                            "utilization", "mean_solve_ms", "moved_pct",
-                           "forecast_mape", "mean_defer_s", "deferred_pct")
+                           "forecast_mape", "mean_defer_s", "deferred_pct",
+                           "spec")
 
 
 def to_table(rows: Sequence[Dict], cols: Sequence[str] = _TABLE_COLS) -> str:
@@ -436,7 +469,13 @@ def to_table(rows: Sequence[Dict], cols: Sequence[str] = _TABLE_COLS) -> str:
 
 def to_csv(rows: Sequence[Dict], path: str,
            cols: Sequence[str] = _CSV_COLS) -> None:
-    with open(path, "w") as f:
-        f.write(",".join(cols) + "\n")
+    """Write tidy rows as CSV. Uses the stdlib writer so the ``spec`` column
+    — whose bracketed params contain commas — is quoted and every row stays
+    re-parseable (``policy.parse(row["spec"])`` rebuilds the cell's
+    scheduler)."""
+    import csv
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(cols)
         for r in rows:
-            f.write(",".join(str(r.get(c, "")) for c in cols) + "\n")
+            w.writerow([r.get(c, "") for c in cols])

@@ -1,0 +1,256 @@
+"""Declarative policy-spec API: grammar round-trip, registry validation,
+pipeline parity with the deprecated ``make_scheduler`` shim, and sweeps
+driven from spec strings alone."""
+import copy
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import policy
+from repro.core import telemetry
+from repro.core.baselines import make_scheduler
+from repro.sim import scenarios
+from repro.sim.engine import EventSimulator
+
+
+@pytest.fixture(scope="module")
+def tele():
+    return telemetry.generate(days=2, seed=0)
+
+
+# ---------------------------------------------------------------------------
+# Grammar: parse / format
+# ---------------------------------------------------------------------------
+
+def test_parse_typed_params_and_round_trip():
+    spec = policy.parse("waterwise[lam_h2o=0.7,backend=jax]")
+    assert spec.name == "waterwise"
+    assert spec.params == {"lam_h2o": 0.7, "backend": "jax"}
+    assert isinstance(spec.params["lam_h2o"], float)
+    assert isinstance(spec.params["backend"], str)
+    assert policy.parse(str(spec)) == spec
+    # Whitespace and empty brackets are tolerated; params stay explicit-only.
+    assert policy.parse("  waterwise [ lam_h2o = 0.7 ]  ").params == \
+        {"lam_h2o": 0.7}
+    assert policy.parse("waterwise[]") == policy.parse("waterwise")
+
+
+def test_parse_accepts_spec_objects_and_bool_int():
+    spec = policy.parse(policy.PolicySpec("waterwise-forecast",
+                                          {"horizon_slots": "4",
+                                           "record_windows": "true"}))
+    assert spec.params == {"horizon_slots": 4, "record_windows": True}
+    assert str(spec) == "waterwise-forecast[horizon_slots=4," \
+                        "record_windows=true]"
+
+
+def test_unknown_policy_has_did_you_mean():
+    with pytest.raises(policy.UnknownPolicyError, match="waterwise"):
+        policy.parse("waterwize")
+    # Backward compatible with the old lambda-table KeyError contract.
+    with pytest.raises(KeyError):
+        policy.parse("no-such-policy")
+
+
+def test_unknown_param_has_did_you_mean():
+    with pytest.raises(policy.UnknownParamError, match="lam_h2o"):
+        policy.parse("waterwise[lam_h20=1.0]")
+    with pytest.raises(policy.UnknownParamError, match="accepts no"):
+        policy.parse("round-robin[x=1]")
+    # A reactive-only param on a forecast policy is unknown, not silently
+    # dropped (the old frozenset behavior).
+    with pytest.raises(policy.UnknownParamError):
+        policy.parse("waterwise-oracle[forecaster=oracle]")
+
+
+def test_ill_typed_params():
+    with pytest.raises(policy.ParamValueError, match="float"):
+        policy.parse("waterwise[lam_h2o=abc]")
+    with pytest.raises(policy.ParamValueError, match="int"):
+        policy.parse("waterwise-forecast[horizon_slots=2.5]")
+    with pytest.raises(policy.ParamValueError, match="bool"):
+        policy.parse("waterwise[record_windows=maybe]")
+
+
+def test_malformed_bracket_syntax():
+    for bad in ("waterwise[lam_h2o=1", "waterwise[a]", "waterwise[=1]",
+                "waterwise[lam_h2o=]", "waterwise[x=1][y=2]",
+                "waterwise[lam_h2o=1,lam_h2o=2]", "[x=1]", ""):
+        with pytest.raises(policy.SpecSyntaxError):
+            policy.parse(bad)
+
+
+def test_with_params_and_with_defaults(tele):
+    spec = policy.parse("waterwise[lam_h2o=0.7]")
+    over = spec.with_params(lam_h2o=0.9, backend="flow")
+    assert over.params == {"lam_h2o": 0.9, "backend": "flow"}
+    kept = spec.with_defaults(lam_h2o=0.1, sigma=5.0)
+    assert kept.params == {"lam_h2o": 0.7, "sigma": 5.0}
+    with pytest.raises(policy.UnknownParamError):
+        spec.with_params(nope=1)
+
+
+def test_split_specs_honours_brackets():
+    assert policy.split_specs(
+        "baseline, waterwise[lam_co2=0.3,lam_h2o=0.7] ,least-load") == \
+        ["baseline", "waterwise[lam_co2=0.3,lam_h2o=0.7]", "least-load"]
+
+
+def test_registry_covers_all_legacy_names():
+    names = set(policy.list_policies())
+    assert {"baseline", "round-robin", "least-load", "carbon-greedy-opt",
+            "water-greedy-opt", "ecovisor", "waterwise",
+            "waterwise-forecast", "waterwise-oracle",
+            "carbon-forecast"} <= names
+    for n in names:
+        e = policy.get_policy(n)
+        assert e.description
+    assert policy.get_policy("waterwise-forecast").forecast_driven
+    assert not policy.get_policy("waterwise").forecast_driven
+    # describe() renders every policy in both formats.
+    text, md = policy.describe(), policy.describe(markdown=True)
+    for n in names:
+        assert n in text and f"`{n}`" in md
+
+
+# ---------------------------------------------------------------------------
+# Property: parse ∘ format is the identity over schema-valid specs
+# ---------------------------------------------------------------------------
+
+def _spec_strategy():
+    def params_for(name):
+        entry = policy.get_policy(name)
+        by_type = {
+            float: st.floats(allow_nan=False, allow_infinity=False,
+                             width=64),
+            int: st.integers(-10**9, 10**9),
+            bool: st.booleans(),
+            str: st.text(alphabet="abcdefghijklmnopqrstuvwxyz0123456789_-",
+                         min_size=1, max_size=12),
+        }
+        opts = {k: by_type[p.type] for k, p in entry.params.items()}
+        return st.fixed_dictionaries(
+            {}, optional=opts).map(lambda d: policy.PolicySpec(name, d))
+    return st.sampled_from(policy.list_policies()).flatmap(params_for)
+
+
+@settings(max_examples=200, deadline=None)
+@given(spec=_spec_strategy())
+def test_spec_format_parse_round_trip_property(spec):
+    text = spec.format()
+    back = policy.parse(text)
+    assert back == spec
+    assert back.format() == text
+
+
+# ---------------------------------------------------------------------------
+# Pipeline construction + shim parity
+# ---------------------------------------------------------------------------
+
+def test_build_configures_pipeline(tele):
+    ctl = policy.build("waterwise[lam_h2o=0.7,backend=jax,window=5]", tele)
+    assert isinstance(ctl, policy.PolicyPipeline)
+    assert (ctl.lam_h2o, ctl.lam_co2) == (0.7, pytest.approx(0.3))
+    assert ctl.backend == "jax" and ctl.history.window == 5
+    assert isinstance(ctl.pricer, policy.SnapshotPricer)
+    assert isinstance(ctl.deferral, policy.NextRoundDeferral)
+    assert not hasattr(ctl, "forecast_mape")
+
+    fc = policy.build("waterwise-oracle[horizon_slots=4,guard_s=100]", tele)
+    assert isinstance(fc.pricer, policy.ForecastPricer)
+    assert isinstance(fc.deferral, policy.QueueDeferral)
+    assert fc.forecaster_name == "oracle" and fc.horizon_slots == 4
+    assert fc.queue.guard_s == 100.0 and fc.pricer.guard_s == 100.0
+    assert hasattr(fc, "forecast_mape")
+
+    cf = policy.build("carbon-forecast", tele)
+    assert (cf.lam_co2, cf.lam_h2o) == (1.0, 0.0)
+
+
+def test_make_scheduler_shim_matches_registry_bit_for_bit(tele):
+    """Acceptance: the deprecated shim and the registry path produce
+    bit-identical footprints on the 0.05-day nominal cell."""
+    inst = scenarios.get_scenario("nominal").build(0.05, 0, 23000.0, 0.15)
+
+    def footprints(sched):
+        sim = EventSimulator(inst.tele, inst.capacity)
+        res = sim.run(copy.deepcopy(inst.jobs), sched)
+        return (sum(r.carbon_g for r in res["records"]),
+                sum(r.water_l for r in res["records"]),
+                [(r.job.job_id, r.region, r.start_s)
+                 for r in res["records"]])
+
+    for name in ("waterwise", "baseline", "ecovisor"):
+        old = footprints(make_scheduler(name, inst.tele))
+        new = footprints(policy.build(name, inst.tele))
+        assert old == new    # bit-identical, not approx
+
+    # Kwarg path: the shim forwards through the same validation.
+    old = footprints(make_scheduler("waterwise", inst.tele, lam_co2=0.3,
+                                    lam_h2o=0.7))
+    new = footprints(policy.build("waterwise[lam_co2=0.3,lam_h2o=0.7]",
+                                  inst.tele))
+    assert old == new
+    with pytest.raises(policy.UnknownParamError):
+        make_scheduler("round-robin", inst.tele, lam_h2o=0.7)
+
+
+def test_engine_accepts_spec_strings(tele):
+    from repro.sim.trace import (borg_trace, scale_capacity_for_utilization)
+    jobs = borg_trace(days=0.02, seed=0, tolerance=0.5)
+    cap = scale_capacity_for_utilization(jobs, 0.02, 5, 0.15)
+    res = EventSimulator(tele, cap).run(copy.deepcopy(jobs), "least-load")
+    assert len(res["records"]) == len(jobs)
+    res2 = EventSimulator(tele, cap).run(
+        copy.deepcopy(jobs), policy.parse("waterwise[backend=flow]"))
+    assert len(res2["records"]) == len(jobs)
+
+
+# ---------------------------------------------------------------------------
+# Sweeps from spec strings alone (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+def test_run_cell_rejects_sched_kwargs_for_paramless_policy():
+    """The silent-kwarg-drop fix: tuning kwargs on a policy that has no
+    params raise instead of vanishing."""
+    with pytest.raises(policy.UnknownParamError, match="round-robin"):
+        scenarios.run_cell("nominal", "round-robin", days=0.02,
+                           sched_kwargs={"lam_h2o": 0.7})
+    with pytest.raises(policy.UnknownParamError, match="did you mean"):
+        scenarios.run_cell("nominal", "waterwise", days=0.02,
+                           sched_kwargs={"lam_h20": 0.7})
+
+
+def test_sweep_from_spec_strings_emits_reparseable_spec_column(tmp_path):
+    rows = scenarios.sweep(
+        ["baseline", "waterwise[lam_h2o=0.7,backend=flow]"],
+        ["nominal", "drought-summer"], days=0.05, seed=0, max_workers=1)
+    assert len(rows) == 4
+    for row in rows:
+        spec = policy.parse(row["spec"])
+        assert spec.name == row["scheduler"]
+        if row["scheduler"] == "waterwise":
+            assert spec == policy.parse("waterwise[lam_h2o=0.7,backend=flow]")
+    # The spec column survives CSV round-trips (commas inside brackets).
+    import csv
+    path = tmp_path / "sweep.csv"
+    scenarios.to_csv(rows, str(path))
+    with open(path, newline="") as f:
+        read = list(csv.DictReader(f))
+    assert len(read) == len(rows)
+    for line in read:
+        assert policy.parse(line["spec"]).name == line["scheduler"]
+
+
+def test_forecast_error_regime_resolves_into_spec_column():
+    row = scenarios.run_cell("forecast-error", "waterwise-oracle", days=0.02,
+                             seed=3)
+    spec = policy.parse(row["spec"])
+    assert spec.params["forecast_bias"] == pytest.approx(1.30)
+    assert spec.params["forecast_noise"] == pytest.approx(0.15)
+    assert spec.params["forecast_seed"] == 3
+    # Re-building from the row's spec reproduces the injected forecaster.
+    tele = telemetry.generate(days=1, seed=0)
+    ctl = policy.build(spec, tele)
+    assert ctl.forecast_bias == pytest.approx(1.30)

@@ -108,3 +108,19 @@ def test_transfer_latency_properties():
     assert lat > telemetry.transfer_latency_s(2e9, 0, 0) == 0.0
     assert (telemetry.transfer_latency_s(4e9, 0, 1)
             > telemetry.transfer_latency_s(2e9, 0, 1))
+
+
+def test_region_subset_keeps_wan_identity():
+    """Non-prefix region subsets (fig12 ablations) must price transfers
+    with the named regions' WAN rows, not whatever occupies the same local
+    index in the global tables."""
+    sub = [r for r in telemetry.REGIONS
+           if r.name in ("Zurich", "Milan", "Mumbai")]
+    tele3 = telemetry.generate(days=1, seed=0, regions=sub)
+    zur, mum = 0, 2                      # local indices in the subset
+    assert tele3.transfer_latency_s(2e9, zur, mum) == \
+        telemetry.transfer_latency_s(2e9, telemetry.REGION_INDEX["Zurich"],
+                                     telemetry.REGION_INDEX["Mumbai"])
+    full = telemetry.generate(days=1, seed=0)
+    np.testing.assert_array_equal(full.wan_bw_gbps, telemetry.WAN_BW_GBPS)
+    np.testing.assert_array_equal(full.wan_rtt_s, telemetry.WAN_RTT_S)
