@@ -1,9 +1,10 @@
-"""Shared benchmark harness: run policy specs through scenario cells.
+"""Shared benchmark harness: run policy specs through experiment cells.
 
-Every figure module drives ``scenarios.run_cell`` — the same event-driven
-engine + scenario registry path as the sweep CLI — via ``run_cells``.
-``quick`` mode (default, used by ``python -m benchmarks.run``) simulates a
-few hours of trace; ``--full`` reproduces the paper's 10-day/230k-job runs.
+Every figure module drives ``repro.experiments`` cells — the same
+event-driven engine + scenario/policy spec path as the sweep CLI — via
+``run_cells``. ``quick`` mode (default, used by ``python -m
+benchmarks.run``) simulates a few hours of trace; ``--full`` reproduces
+the paper's 10-day/230k-job runs.
 """
 from __future__ import annotations
 
@@ -12,31 +13,45 @@ from typing import Dict, List, Optional, Sequence
 QUICK_DAYS = 0.15
 FULL_DAYS = 10.0
 
+#: Builder kwargs the ScenarioSpec grammar cannot express (objects); they
+#: stay in-process and are forwarded as ``extra_build_kwargs``.
+_NON_SPEC_BUILD = ("regions",)
+
 
 def run_cells(schedulers: Sequence, *, days: float = QUICK_DAYS,
               tolerance: float = 0.5, utilization: float = 0.15,
               jobs_per_day: float = 23000.0, seed: int = 0,
               scenario: str = "nominal", keep_result: bool = False,
               **build_kwargs) -> Dict[str, Dict]:
-    """One ``scenarios.run_cell`` row per policy spec, keyed by policy name.
+    """One experiment-cell row per policy spec, keyed by policy name.
 
     ``schedulers`` are policy specs (``"waterwise[lam_co2=0.3,lam_h2o=0.7]"``
     or ``PolicySpec`` objects); extra keyword arguments (``trace``,
-    ``ewif_table``, ``regions``, ...) reach the scenario builder. When
-    ``baseline`` is among the specs, carbon/water savings are attached to
-    every row relative to it. ``keep_result=True`` keeps the raw engine
-    result as ``row["_result"]`` for figure-level post-processing
-    (per-region distributions, solve-time percentiles).
+    ``ewif_table``, ``regions``, ...) reach the scenario builder —
+    spec-expressible ones fold into the cell's ``ScenarioSpec``, objects
+    (``regions``) stay in-process. When ``baseline`` is among the specs,
+    carbon/water savings are attached to every row relative to it.
+    ``keep_result=True`` keeps the raw engine result as ``row["_result"]``
+    for figure-level post-processing (per-region distributions, solve-time
+    percentiles).
     """
-    from repro.sim import scenarios
-    from repro.sim.metrics import savings_vs
+    from repro import experiments, policy
+    from repro.spec import SPEC_TYPES
 
+    params = dict(days=days, seed=seed, jobs_per_day=jobs_per_day,
+                  utilization=utilization, tolerance=tolerance)
+    extra = {}
+    for key, value in build_kwargs.items():
+        if key in _NON_SPEC_BUILD or type(value) not in SPEC_TYPES:
+            extra[key] = value
+        else:
+            params[key] = value
+    scen = experiments.make_scenario_spec(scenario, **params)
     out: Dict[str, Dict] = {}
     for sched in schedulers:
-        row = scenarios.run_cell(
-            scenario, sched, days=days, seed=seed, jobs_per_day=jobs_per_day,
-            utilization=utilization, tolerance=tolerance,
-            build_kwargs=build_kwargs or None, return_result=keep_result)
+        cell = experiments.Cell(scen, policy.as_spec(sched))
+        row = experiments.run_cell(cell, extra_build_kwargs=extra or None,
+                                   return_result=keep_result)
         if row["scheduler"] in out:
             # Keyed by bare policy name — two param variants of one policy
             # in a single call would shadow each other silently.
@@ -45,9 +60,7 @@ def run_cells(schedulers: Sequence, *, days: float = QUICK_DAYS,
                 f"call; run param variants in separate calls (the rows are "
                 f"keyed by policy name)")
         out[row["scheduler"]] = row
-    if "baseline" in out:
-        for row in out.values():
-            row.update(savings_vs(out["baseline"], row))
+    experiments.attach_savings(list(out.values()))
     return out
 
 

@@ -5,17 +5,28 @@
   PYTHONPATH=src python -m benchmarks.run --only fig5,table2
 
 Scenario sweep (event-driven engine, schedulers × scenarios cross product;
-``--schedulers`` takes policy-spec strings, bracketed params included):
+``--schedulers`` takes policy-spec strings and ``--scenarios`` scenario-spec
+strings, bracketed params included):
 
   PYTHONPATH=src python -m benchmarks.run --sweep            # quick
   PYTHONPATH=src python -m benchmarks.run --sweep --full     # 100k jobs/10d
   PYTHONPATH=src python -m benchmarks.run --sweep \\
-      --schedulers 'baseline,waterwise[lam_h2o=0.7,backend=jax]'
+      --schedulers 'baseline,waterwise[lam_h2o=0.7,backend=jax]' \\
+      --scenarios 'diurnal[jobs_per_day=1e5],drought-summer'
+
+Executor backends (identical rows, different scaling): ``--executor
+serial``, ``--executor process`` (one worker per cell, the default), or
+``--executor 'sharded[shards=4]'`` / ``--shards 4`` (split each cell's
+trace by arrival time across workers — the 1M+-job single-cell path).
+
+Experiment plans are JSON artifacts: ``--save-plan plan.json`` writes the
+sweep's (scenarios × policies × seeds) grid without running it;
+``--plan plan.json`` runs a saved plan.
 
 Registries (names, accepted params, descriptions):
 
   PYTHONPATH=src python -m benchmarks.run --list-schedulers [--markdown]
-  PYTHONPATH=src python -m benchmarks.run --list-scenarios
+  PYTHONPATH=src python -m benchmarks.run --list-scenarios  [--markdown]
 """
 from __future__ import annotations
 
@@ -29,39 +40,70 @@ def list_schedulers(markdown: bool) -> None:
     print(policy.describe(markdown=markdown))
 
 
-def list_scenarios() -> None:
-    from repro.sim import scenarios
-    width = max(map(len, scenarios.list_scenarios()), default=0)
-    for name in scenarios.list_scenarios():
-        print(f"{name:{width}s}  {scenarios.get_scenario(name).description}")
+def list_scenarios(markdown: bool) -> None:
+    from repro import experiments
+    print(experiments.describe_scenarios(markdown=markdown))
 
 
-def run_sweep(args) -> None:
-    from repro import policy
-    from repro.sim import scenarios
+def build_plan(args):
+    from repro import experiments, policy
+    from repro.spec import split_specs
 
     full = args.full
     days = args.days if args.days is not None else (10.0 if full else 0.2)
     jobs_per_day = (args.jobs_per_day if args.jobs_per_day is not None
                     else (10000.0 if full else 23000.0))
-    schedulers = policy.split_specs(args.schedulers)
     if args.trace_csv:
-        scenarios.register_csv_scenario("csv-trace", args.trace_csv)
-    names = (args.scenarios.split(",") if args.scenarios
-             else scenarios.list_scenarios())
+        from repro.sim import scenarios as scen_registry
+        scen_registry.register_csv_scenario("csv-trace", args.trace_csv)
+    names = (split_specs(args.scenarios) if args.scenarios
+             else None)
+    if names is None:
+        from repro.sim import scenarios as scen_registry
+        names = scen_registry.list_scenarios()
+    params = dict(days=days, seed=args.seed, jobs_per_day=jobs_per_day)
+    if args.tolerance is not None:
+        params["tolerance"] = args.tolerance
+    scenario_specs = [
+        experiments.parse_scenario(n).with_defaults(**params) for n in names]
+    policies = [policy.as_spec(s) for s in split_specs(args.schedulers)]
+    seeds = ([int(s) for s in args.seeds.split(",")] if args.seeds else None)
+    return experiments.ExperimentPlan(tuple(scenario_specs), tuple(policies),
+                                      tuple(seeds) if seeds else (None,))
+
+
+def run_sweep(args) -> None:
+    from repro import experiments
+
+    if args.plan:
+        plan = experiments.ExperimentPlan.load(args.plan)
+    else:
+        plan = build_plan(args)
+    if args.save_plan:
+        plan.save(args.save_plan)
+        print(f"# plan ({len(plan.cells())} cells) -> {args.save_plan}")
+        return
+    executor = args.executor
+    options = {}
+    if args.shards is not None:
+        executor = executor if executor.startswith("sharded") else "sharded"
+        options["shards"] = args.shards
+    if args.workers is not None:
+        options["max_workers"] = args.workers
     t0 = time.time()
-    rows = scenarios.sweep(schedulers, names, days=days,
-                           jobs_per_day=jobs_per_day, seed=args.seed,
-                           tolerance=args.tolerance,
-                           max_workers=args.workers)
-    print(scenarios.to_table(rows))
+    rows = plan.run(executor=executor, strict=False, **options)
+    print(experiments.to_table(rows))
     out = os.path.join(os.path.dirname(__file__), "out")
     os.makedirs(out, exist_ok=True)
     csv = os.path.join(out, "scenario_sweep.csv")
-    scenarios.to_csv(rows, csv)
-    total = sum(r["jobs"] for r in rows)
-    print(f"\n# sweep: {len(rows)} cells, {total} job-placements, "
-          f"{time.time() - t0:.1f}s wall -> {csv}")
+    experiments.to_csv(rows, csv)
+    failed = [r for r in rows if r.get("error")]
+    total = sum(r.get("jobs", 0) for r in rows)
+    print(f"\n# sweep: {len(rows)} cells ({len(failed)} failed), "
+          f"{total} job-placements, {time.time() - t0:.1f}s wall "
+          f"[{executor}] -> {csv}")
+    for r in failed:
+        print(f"# FAILED {r['scenario_spec']} × {r['spec']}: {r['error']}")
 
 
 def main() -> None:
@@ -71,19 +113,35 @@ def main() -> None:
     ap.add_argument("--sweep", action="store_true",
                     help="run the scenario sweep instead of the paper figures")
     ap.add_argument("--scenarios", default="",
-                    help="comma-separated scenario names (default: all)")
+                    help="comma-separated scenario specs, e.g. "
+                         "'diurnal[jobs_per_day=1e5],drought-summer' "
+                         "(default: all registered scenarios)")
     ap.add_argument("--schedulers",
                     default="baseline,least-load,ecovisor,waterwise",
                     help="comma-separated policy specs, e.g. "
                          "'baseline,waterwise[lam_h2o=0.7,backend=jax]'")
+    ap.add_argument("--executor", default="process",
+                    help="executor spec: serial | process[max_workers=N] | "
+                         "sharded[shards=N,max_workers=N,handoff_s=S]")
+    ap.add_argument("--shards", type=int, default=None,
+                    help="shortcut: run with the sharded executor at N "
+                         "shards per cell")
+    ap.add_argument("--seeds", default="",
+                    help="comma-separated seed axis for the plan "
+                         "(multi-seed replication), e.g. '0,1,2'")
+    ap.add_argument("--plan", default="",
+                    help="run a saved ExperimentPlan JSON instead of "
+                         "building one from the flags")
+    ap.add_argument("--save-plan", default="",
+                    help="write the plan JSON and exit without running")
     ap.add_argument("--list-schedulers", action="store_true",
                     help="print the policy registry (params, descriptions) "
                          "and exit")
     ap.add_argument("--list-scenarios", action="store_true",
                     help="print the scenario registry and exit")
     ap.add_argument("--markdown", action="store_true",
-                    help="with --list-schedulers: emit the markdown table "
-                         "embedded in README.md")
+                    help="with --list-schedulers/--list-scenarios: emit the "
+                         "markdown table embedded in README.md")
     ap.add_argument("--days", type=float, default=None)
     ap.add_argument("--jobs-per-day", type=float, default=None)
     ap.add_argument("--seed", type=int, default=0)
@@ -101,9 +159,9 @@ def main() -> None:
         list_schedulers(args.markdown)
         return
     if args.list_scenarios:
-        list_scenarios()
+        list_scenarios(args.markdown)
         return
-    if args.sweep:
+    if args.sweep or args.plan:
         if args.only:
             ap.error("--only does not apply with --sweep "
                      "(use --scenarios/--schedulers to filter)")
@@ -114,6 +172,10 @@ def main() -> None:
                       seed=args.seed != 0, workers=args.workers is not None,
                       tolerance=args.tolerance is not None,
                       trace_csv=args.trace_csv != "",
+                      shards=args.shards is not None,
+                      seeds=args.seeds != "",
+                      save_plan=args.save_plan != "",
+                      executor=args.executor != ap.get_default("executor"),
                       schedulers=args.schedulers
                       != ap.get_default("schedulers"))
     if any(sweep_only.values()):

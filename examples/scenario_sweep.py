@@ -1,24 +1,25 @@
-"""Scenario sweep in ~30 lines: policy specs × environmental regimes.
+"""Scenario sweep in ~40 lines: an ExperimentPlan × executor backends.
 
 Runs a small Borg-like trace through three scheduling policies under three
 regimes — nominal, a drought summer (elevated WUE + scarcity), and a full
 outage of the greenest region — on the event-driven engine, then prints the
-tidy results table. Schedulers are *policy specs*: bracketed strings that
-parameterize the registry (``waterwise[lam_h2o=0.7,backend=jax]``), so the
-same flag drives any variant, and every output row carries a ``spec``
-column that rebuilds its scheduler exactly. The full registries
-(``scenarios.list_scenarios()``, ``policy.list_policies()``) and
-paper-scale traces are driven the same way:
+tidy results table. Everything is declarative data: schedulers are *policy
+specs* (``waterwise[lam_h2o=0.7,backend=jax]``), regimes are *scenario
+specs* (``diurnal[days=10,jobs_per_day=1e6,tolerance=0.5]``), the grid is
+an ``ExperimentPlan`` (JSON-serializable), and the executor is one of three
+interchangeable backends producing identical rows:
 
   PYTHONPATH=src python examples/scenario_sweep.py
   PYTHONPATH=src python examples/scenario_sweep.py \\
       --schedulers 'baseline,waterwise[lam_h2o=0.7,backend=flow]'
+  PYTHONPATH=src python examples/scenario_sweep.py \\
+      --scenarios 'diurnal[jobs_per_day=46000.0]' --executor 'sharded[shards=2]'
   PYTHONPATH=src python -m benchmarks.run --sweep --full   # 100k jobs, 10d
 """
 import argparse
 
-from repro import policy
-from repro.sim import scenarios
+from repro import experiments, policy
+from repro.spec import split_specs
 
 SCHEDULERS = "baseline,least-load,waterwise"
 SCENARIOS = "nominal,drought-summer,capacity-loss"
@@ -29,18 +30,30 @@ def main() -> None:
     ap.add_argument("--days", type=float, default=0.1)
     ap.add_argument("--schedulers", default=SCHEDULERS,
                     help="comma-separated policy specs (bracketed params OK)")
-    ap.add_argument("--scenarios", default=SCENARIOS)
+    ap.add_argument("--scenarios", default=SCENARIOS,
+                    help="comma-separated scenario specs (bracketed params "
+                         "OK)")
+    ap.add_argument("--executor", default="process",
+                    help="serial | process | sharded[shards=N] — all three "
+                         "produce identical rows")
+    ap.add_argument("--seeds", default="",
+                    help="seed axis for multi-seed replication, e.g. '0,1,2'")
     args = ap.parse_args()
 
-    specs = policy.split_specs(args.schedulers)
-    rows = scenarios.sweep(specs, args.scenarios.split(","),
-                           days=args.days, seed=0)
-    print(scenarios.to_table(rows))
+    plan = experiments.ExperimentPlan.build(
+        scenarios=[experiments.parse_scenario(s).with_defaults(days=args.days)
+                   for s in split_specs(args.scenarios)],
+        policies=split_specs(args.schedulers),
+        seeds=[int(s) for s in args.seeds.split(",")] if args.seeds else None)
+    rows = plan.run(executor=args.executor)
+    print(experiments.to_table(rows))
     for row in rows:
-        assert policy.parse(row["spec"])     # every row is reproducible
+        # Every row is reproducible from its spec columns alone.
+        assert policy.parse(row["spec"])
+        assert experiments.parse_scenario(row["scenario_spec"])
         if row["scheduler"] == "baseline" or "carbon_savings_pct" not in row:
             continue                         # savings need baseline in sweep
-        print(f"{row['spec']} under {row['scenario']}: "
+        print(f"{row['spec']} under {row['scenario_spec']}: "
               f"{row['carbon_savings_pct']:.1f}% carbon, "
               f"{row['water_savings_pct']:.1f}% water saved vs baseline")
 

@@ -1,0 +1,158 @@
+"""ONE ``Executor`` abstraction, three interchangeable backends.
+
+Every backend maps a list of experiment cells to tidy rows with identical
+values — the backend choice is an operational knob (latency, parallelism,
+scale), never a semantic one (pinned by parity tests):
+
+* ``serial``   — in-process loop; zero overhead, fully deterministic.
+* ``process``  — today's sweep pool: one worker process per *cell* (cells
+  are independent and rebuilt from primitives).
+* ``sharded``  — splits each *single* cell's trace by arrival time across
+  worker processes with engine-state handoff + boundary stitching
+  (``repro.experiments.shard``); the scale-out path for 1M+-job cells.
+
+Executors are themselves spec-addressable through the shared grammar —
+``"sharded[shards=4,max_workers=4]"`` — with schemas introspected from the
+backend constructors, so ``--executor`` CLI flags, plan runners, and tests
+all speak the same validated language as policies and scenarios.
+
+A crashed cell never aborts the others on any backend: its row carries the
+failure in the ``error`` column and execution continues (the old sweep's
+bare ``f.result()`` abort is gone).
+"""
+from __future__ import annotations
+
+import concurrent.futures
+import os
+from typing import Dict, List, Optional, Union
+
+from repro.experiments import runner
+from repro.experiments.plan import Cell
+from repro.spec import (Param, parse_raw, params_from_signature,
+                        unknown_name_error, validate_params)
+
+
+class Executor:
+    """Maps cells to tidy rows; subclasses define *where* cells run."""
+
+    name = "?"
+
+    def run(self, cells: List[Cell]) -> List[Dict]:
+        raise NotImplementedError
+
+    def _guarded(self, fn, cell: Cell) -> Dict:
+        try:
+            return fn(cell)
+        except Exception as e:              # noqa: BLE001 — error-row contract
+            return runner.error_row(cell, e)
+
+
+class SerialExecutor(Executor):
+    """In-process, one cell after another."""
+
+    name = "serial"
+
+    def run(self, cells: List[Cell]) -> List[Dict]:
+        return [self._guarded(runner.run_cell, c) for c in cells]
+
+
+class ProcessExecutor(Executor):
+    """One worker process per cell (the classic sweep fan-out).
+
+    ``max_workers=0`` auto-sizes to ``min(cpu_count, len(cells))``. Serial
+    and process runs produce identical rows: every cell is deterministic
+    in its specs and rebuilt from primitives inside the worker.
+    """
+
+    name = "process"
+
+    def __init__(self, max_workers: int = 0):
+        self.max_workers = int(max_workers)
+
+    def run(self, cells: List[Cell]) -> List[Dict]:
+        workers = self.max_workers or min(os.cpu_count() or 1, len(cells))
+        if workers <= 1 or len(cells) <= 1:
+            return SerialExecutor().run(cells)
+        rows: List[Dict] = []
+        with concurrent.futures.ProcessPoolExecutor(workers) as pool:
+            futs = [pool.submit(runner.run_cell, c) for c in cells]
+            for cell, fut in zip(cells, futs):
+                try:
+                    rows.append(fut.result())
+                except Exception as e:      # noqa: BLE001 — error-row contract
+                    rows.append(runner.error_row(cell, e))
+        return rows
+
+
+class ShardedExecutor(Executor):
+    """Splits each cell's trace across ``shards`` worker slices
+    (``repro.experiments.shard``): the single-cell scale-out backend.
+
+    ``shards`` trace slices per cell; ``max_workers=0`` auto-sizes the
+    per-cell pool; ``handoff_s=0`` auto-sizes the warm-up handoff window
+    from the trace's longest possible in-flight span. Cells run one after
+    another — the parallelism lives *inside* each cell.
+    """
+
+    name = "sharded"
+
+    def __init__(self, shards: int = 2, max_workers: int = 0,
+                 handoff_s: float = 0.0):
+        self.shards = int(shards)
+        self.max_workers = int(max_workers)
+        self.handoff_s = float(handoff_s)
+
+    def run(self, cells: List[Cell]) -> List[Dict]:
+        from repro.experiments import shard
+
+        def one(cell: Cell) -> Dict:
+            return shard.run_sharded_cell(
+                cell, shards=self.shards,
+                max_workers=self.max_workers or None,
+                handoff_s=self.handoff_s)
+
+        return [self._guarded(one, c) for c in cells]
+
+
+_EXECUTORS = {cls.name: cls
+              for cls in (SerialExecutor, ProcessExecutor, ShardedExecutor)}
+
+ExecutorLike = Union[str, Executor]
+
+
+def list_executors() -> List[str]:
+    return sorted(_EXECUTORS)
+
+
+def executor_schema(name: str) -> Dict[str, Param]:
+    cls = _EXECUTORS.get(name)
+    if cls is None:
+        raise unknown_name_error("executor", name, list(_EXECUTORS))
+    return {p.name: p
+            for p in params_from_signature(cls.__init__, drop_positional=1)}
+
+
+def get_executor(spec: ExecutorLike, **overrides) -> Executor:
+    """Resolve an executor spec — ``"sharded[shards=4]"`` — to a backend
+    instance. ``overrides`` (CLI flags; ``None`` values ignored) are
+    validated against the backend's introspected schema exactly like any
+    other spec params."""
+    if isinstance(spec, Executor):
+        return spec
+    name, raw = parse_raw(spec, kind="executor")
+    schema = executor_schema(name)
+    merged = dict(raw)
+    merged.update({k: v for k, v in overrides.items() if v is not None})
+    return _EXECUTORS[name](**validate_params("executor", name, schema,
+                                              merged))
+
+
+def describe_executors() -> str:
+    lines = []
+    for name in list_executors():
+        cls = _EXECUTORS[name]
+        doc = (cls.__doc__ or "").strip().splitlines()[0]
+        lines.append(f"{name:10s} {doc}")
+        for p in executor_schema(name).values():
+            lines.append(f"    {p.describe()}")
+    return "\n".join(lines)

@@ -1,0 +1,219 @@
+"""``ExperimentPlan``: the (scenarios × policies × seeds) grid as data.
+
+A plan is the declarative form of a whole experiment: every axis is a spec
+(scenario specs, policy specs, seed overrides), the cross product is the
+cell list, and the whole object serializes to/from JSON — so a fleet-scale
+study is one reviewable artifact instead of a kwargs pile, and a shard
+worker or a remote host can be driven by the plan text alone.
+
+    plan = ExperimentPlan.build(
+        scenarios=["diurnal[days=10,jobs_per_day=1e5]", "drought-summer"],
+        policies=["baseline", "waterwise[lam_h2o=0.7]"],
+        seeds=[0, 1, 2])
+    rows = plan.run(executor="process")          # or "sharded[shards=4]"
+
+Each cell yields one tidy row (``TABLE_COLS`` / ``CSV_COLS`` schema); rows
+carry re-parseable ``spec`` (policy) and ``scenario_spec`` columns plus the
+``seed``, so any CSV line reproduces its cell exactly. Failed cells don't
+abort the others: their rows carry an ``error`` column (see
+``ExperimentPlan.run(strict=...)``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+from repro import policy
+from repro.experiments.scenario import ScenarioSpec, parse_scenario
+from repro.sim.metrics import savings_vs
+
+PlanLike = Union[str, "ExperimentPlan"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    """One experiment cell: a scenario spec × a policy spec × a seed
+    override (``None`` = use the scenario spec's own ``seed`` param)."""
+    scenario: ScenarioSpec
+    policy: policy.PolicySpec
+    seed: Optional[int] = None
+
+    def resolved_scenario(self) -> ScenarioSpec:
+        """The scenario spec with the seed override applied."""
+        if self.seed is None:
+            return self.scenario
+        return self.scenario.with_params(seed=self.seed)
+
+    @property
+    def seed_value(self) -> int:
+        if self.seed is not None:
+            return self.seed
+        return int(self.scenario.params.get("seed", 0))
+
+    def label(self) -> str:
+        return (f"{self.resolved_scenario()} × {self.policy}")
+
+
+@dataclasses.dataclass(frozen=True)
+class ExperimentPlan:
+    """The full experiment grid; axes are tuples of validated specs."""
+    scenarios: Tuple[ScenarioSpec, ...]
+    policies: Tuple[policy.PolicySpec, ...]
+    seeds: Tuple[Optional[int], ...] = (None,)
+
+    @classmethod
+    def build(cls, scenarios: Sequence, policies: Sequence,
+              seeds: Optional[Sequence[Optional[int]]] = None
+              ) -> "ExperimentPlan":
+        """Validated plan from spec strings/objects (fails fast on typos —
+        a misspelled scenario, policy, or param raises before any cell
+        runs, with a did-you-mean message)."""
+        return cls(
+            scenarios=tuple(parse_scenario(s) for s in scenarios),
+            policies=tuple(policy.as_spec(p) for p in policies),
+            seeds=tuple(seeds) if seeds else (None,))
+
+    def cells(self) -> List[Cell]:
+        """The cross product, scenario-major (scenario → seed → policy),
+        matching the old ``sweep`` row order for the default seed axis."""
+        return [Cell(sc, pol, seed)
+                for sc in self.scenarios
+                for seed in self.seeds
+                for pol in self.policies]
+
+    # -- JSON round-trip -----------------------------------------------------
+
+    def to_json(self, indent: int = 2) -> str:
+        return json.dumps(
+            dict(scenarios=[str(s) for s in self.scenarios],
+                 policies=[str(p) for p in self.policies],
+                 seeds=list(self.seeds)), indent=indent)
+
+    @classmethod
+    def from_json(cls, text: str) -> "ExperimentPlan":
+        d = json.loads(text)
+        unknown = set(d) - {"scenarios", "policies", "seeds"}
+        if unknown:
+            raise ValueError(f"unknown ExperimentPlan keys {sorted(unknown)} "
+                             f"(accepts: scenarios, policies, seeds)")
+        return cls.build(d["scenarios"], d["policies"], d.get("seeds"))
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json() + "\n")
+
+    @classmethod
+    def load(cls, path: str) -> "ExperimentPlan":
+        with open(path) as f:
+            return cls.from_json(f.read())
+
+    # -- execution -----------------------------------------------------------
+
+    def run(self, executor: str = "serial", *, strict: bool = False,
+            baseline: str = "baseline", **options) -> List[Dict]:
+        """Run every cell through ``executor`` and return the tidy rows.
+
+        ``executor`` is an executor spec — ``"serial"``, ``"process"``,
+        ``"process[max_workers=4]"``, ``"sharded[shards=4]"`` — resolved by
+        ``repro.experiments.executor``; ``options`` are validated overrides
+        merged into it. Every backend produces identical rows for
+        identical plans (pinned in tests/test_experiments.py).
+
+        A crashed cell never aborts the others: its row records the
+        failure in the ``error`` column (metrics empty). With
+        ``strict=True`` a ``CellError`` naming the failing (scenario,
+        policy) cell is raised *after* all cells finish; the completed
+        rows ride on the exception as ``err.rows``.
+
+        Within each (scenario, seed) group, savings percentages are
+        attached relative to the ``baseline`` policy when present.
+        """
+        from repro.experiments.executor import get_executor
+        from repro.experiments.runner import CellError
+
+        rows = get_executor(executor, **options).run(self.cells())
+        attach_savings(rows, baseline=baseline)
+        if strict:
+            failed = [r for r in rows if r.get("error")]
+            if failed:
+                first = failed[0]
+                err = CellError(first["scenario_spec"], first["spec"],
+                                first["error"])
+                err.rows = rows
+                raise err
+        return rows
+
+
+def attach_savings(rows: Sequence[Dict], baseline: str = "baseline") -> None:
+    """Attach % savings vs the in-group baseline row, including the
+    stress-weighted water view. Groups key on the full resolved
+    ``scenario_spec`` (plus seed), not the bare scenario name — two
+    param-variants of one scenario in a plan each get their own baseline.
+    Error rows neither serve as baselines nor receive savings."""
+    def key(row):
+        return (row.get("scenario_spec", row["scenario"]),
+                row.get("seed", 0))
+
+    by_group: Dict[Tuple, Dict] = {}
+    for row in rows:
+        if row["scheduler"] == baseline and not row.get("error"):
+            by_group[key(row)] = row
+    for row in rows:
+        if row.get("error"):
+            continue
+        base = by_group.get(key(row))
+        if base is None:
+            continue
+        row.update(savings_vs(base, row))
+        bw = base["stress_water_kl"]
+        row["stress_water_savings_pct"] = (
+            100.0 * (bw - row["stress_water_kl"]) / bw if bw else 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Tidy-row schema
+# ---------------------------------------------------------------------------
+
+# "unfinished" stays in the default view: a scheduler that strands jobs
+# accrues less footprint than one that ran everything — savings read from a
+# row with unfinished > 0 are not comparable to the baseline's.
+TABLE_COLS = ("scenario", "scheduler", "jobs", "unfinished", "carbon_kg",
+              "water_kl", "stress_water_kl", "carbon_savings_pct",
+              "water_savings_pct", "violation_pct", "mean_service_ratio",
+              "wall_s")
+CSV_COLS = TABLE_COLS + ("stress_water_savings_pct", "p99_service_ratio",
+                         "utilization", "mean_solve_ms", "moved_pct",
+                         "forecast_mape", "mean_defer_s", "deferred_pct",
+                         "seed", "scenario_spec", "error", "spec")
+
+
+def to_table(rows: Sequence[Dict], cols: Sequence[str] = TABLE_COLS) -> str:
+    """Fixed-width tidy table (one line per experiment cell)."""
+    def fmt(v):
+        if isinstance(v, float):
+            return f"{v:.2f}"
+        return str(v)
+    table = [[fmt(r.get(c, "")) for c in cols] for r in rows]
+    widths = [max(len(c), *(len(t[i]) for t in table)) if table else len(c)
+              for i, c in enumerate(cols)]
+    lines = ["  ".join(c.ljust(w) for c, w in zip(cols, widths))]
+    lines.append("  ".join("-" * w for w in widths))
+    for t in table:
+        lines.append("  ".join(v.rjust(w) for v, w in zip(t, widths)))
+    return "\n".join(lines)
+
+
+def to_csv(rows: Sequence[Dict], path: str,
+           cols: Sequence[str] = CSV_COLS) -> None:
+    """Write tidy rows as CSV. Uses the stdlib writer so the ``spec`` /
+    ``scenario_spec`` columns — whose bracketed params contain commas — are
+    quoted and every row stays re-parseable (``policy.parse(row["spec"])``
+    and ``experiments.parse_scenario(row["scenario_spec"])`` rebuild the
+    cell exactly)."""
+    import csv
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(cols)
+        for r in rows:
+            w.writerow([r.get(c, "") for c in cols])

@@ -12,11 +12,11 @@ at module scope would cycle.
 """
 from __future__ import annotations
 
-import inspect
 from typing import Dict, List, Sequence
 
 from repro.policy.pipeline import forecast_pipeline, reactive_pipeline
 from repro.policy.registry import Param, register_policy
+from repro.spec import params_from_signature
 
 _HELP: Dict[str, str] = {
     "lam_co2": "carbon weight λ_CO2 (λ_CO2 + λ_H2O must sum to 1; "
@@ -50,22 +50,18 @@ _NON_SPEC = {"tele", "server"}
 
 
 def _sig_params(fn, exclude: Sequence[str] = ()) -> List[Param]:
-    """Derive a Param list from a factory's keyword-only signature."""
-    out: List[Param] = []
-    skip = _NON_SPEC | set(exclude)
-    for p in inspect.signature(fn).parameters.values():
-        if (p.name in skip or p.kind is not inspect.Parameter.KEYWORD_ONLY
-                or p.default is inspect.Parameter.empty):
-            continue
-        out.append(Param(p.name, type(p.default), p.default,
-                         _HELP.get(p.name, "")))
-    return out
+    """Derive a Param list from a factory's keyword-only signature (shared
+    ``repro.spec`` introspection; non-spec-expressible defaults like the
+    ``server`` object are skipped automatically)."""
+    return params_from_signature(fn, skip=_NON_SPEC | set(exclude),
+                                 help_text=_HELP)
 
 
 # -- rule-based comparison schedulers (paper §5) ----------------------------
 
 @register_policy("baseline",
-                 "home region, carbon/water-unaware (paper's reference)")
+                 "home region, carbon/water-unaware (paper's reference)",
+                 stateless=True)
 def _baseline(tele):
     from repro.core.baselines import Baseline
     return Baseline(tele)
@@ -79,7 +75,8 @@ def _round_robin(tele):
 
 
 @register_policy("least-load",
-                 "most-free-capacity region, sustainability-unaware")
+                 "most-free-capacity region, sustainability-unaware",
+                 stateless=True)
 def _least_load(tele):
     from repro.core.baselines import LeastLoad
     return LeastLoad(tele)
@@ -87,7 +84,8 @@ def _least_load(tele):
 
 @register_policy("carbon-greedy-opt",
                  "infeasible oracle: knows future carbon intensity, "
-                 "delays/moves each job to its per-job best slot")
+                 "delays/moves each job to its per-job best slot",
+                 stateless=True)
 def _carbon_greedy(tele):
     from repro.core.baselines import GreedyOpt
     return GreedyOpt(tele, "carbon")
@@ -95,7 +93,8 @@ def _carbon_greedy(tele):
 
 @register_policy("water-greedy-opt",
                  "infeasible oracle: knows future water intensity, "
-                 "delays/moves each job to its per-job best slot")
+                 "delays/moves each job to its per-job best slot",
+                 stateless=True)
 def _water_greedy(tele):
     from repro.core.baselines import GreedyOpt
     return GreedyOpt(tele, "water")
@@ -105,7 +104,8 @@ def _water_greedy(tele):
                  "home-region carbon scaler (customized [50]): resource-"
                  "scales jobs against a trailing carbon-intensity target",
                  params=[Param("window", int, 24,
-                               "trailing carbon-target window (hours)")])
+                               "trailing carbon-target window (hours)")],
+                 stateless=True)
 def _ecovisor(tele, **p):
     from repro.core.baselines import Ecovisor
     return Ecovisor(tele, **p)

@@ -6,33 +6,21 @@ is registered once with a description and a parameter schema, unknown names
 and params fail fast with a did-you-mean message (nothing is silently
 dropped any more), and any registered policy can be built from a
 ``PolicySpec`` — or its string form — anywhere a scheduler is accepted.
+
+The grammar/validation plumbing is the shared ``repro.spec`` module (also
+used by scenario and executor specs); this registry contributes the policy
+schemas and factories.
 """
 from __future__ import annotations
 
 import dataclasses
-import difflib
-from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
+from typing import Callable, Dict, List, Union
 
-from repro.policy.spec import (ParamValueError, PolicySpec, UnknownParamError,
-                               UnknownPolicyError, coerce_value, format_value,
-                               parse_raw)
+from repro.policy.spec import PolicySpec, parse_raw
+from repro.spec import (Param, unknown_name_error, unknown_param_error,
+                        validate_params)
 
 SpecLike = Union[str, PolicySpec]
-
-
-@dataclasses.dataclass(frozen=True)
-class Param:
-    """One typed, documented policy parameter (default lives here purely as
-    documentation — the factory's own signature stays the source of truth,
-    and builders receive only explicitly overridden keys)."""
-    name: str
-    type: type
-    default: object
-    help: str = ""
-
-    def describe(self) -> str:
-        return (f"{self.name}={format_value(self.default)}"
-                f":{self.type.__name__}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -45,42 +33,36 @@ class PolicyEntry:
     # Forecast-driven policies accept the scenario sweep's forecast-error
     # injection (forecast_bias / forecast_noise / forecast_seed defaults).
     forecast_driven: bool = False
+    # Stateless policies carry no scheduler-internal state across fully
+    # drained engine instants (no history window, no deferral queue, no
+    # round-robin cursor), so a sharded executor may rebuild them fresh per
+    # trace slice and still reproduce the unsharded run bit-for-bit when
+    # slice boundaries are quiescent. Stateful policies shard via the
+    # engine-state handoff chain instead (repro.experiments.shard).
+    stateless: bool = False
 
     def make_spec(self, **params) -> PolicySpec:
         """Validated, coerced ``PolicySpec`` for this policy."""
-        out = {}
-        for key, raw in params.items():
-            p = self.params.get(key)
-            if p is None:
-                raise UnknownParamError(self._unknown_param_msg(key))
-            out[key] = coerce_value(raw, p.type, policy=self.name, key=key)
-        return PolicySpec(self.name, out)
+        return PolicySpec(self.name, validate_params(
+            "policy", self.name, self.params, params))
 
     def build(self, tele, spec: PolicySpec):
         return self.factory(tele, **dict(spec.params))
-
-    def _unknown_param_msg(self, key: str) -> str:
-        if not self.params:
-            return (f"policy {self.name!r} accepts no parameters "
-                    f"(got {key!r})")
-        hint = difflib.get_close_matches(key, self.params, n=1)
-        did = f" — did you mean {hint[0]!r}?" if hint else ""
-        return (f"unknown parameter {key!r} for policy {self.name!r}{did} "
-                f"(accepts: {', '.join(self.params)})")
 
 
 _REGISTRY: Dict[str, PolicyEntry] = {}
 
 
 def register_policy(name: str, description: str,
-                    params: Sequence[Param] = (),
-                    forecast_driven: bool = False):
+                    params: List[Param] = (),
+                    forecast_driven: bool = False,
+                    stateless: bool = False):
     """Decorator: register ``fn(tele, **params) -> scheduler`` under ``name``."""
     def deco(fn):
         _REGISTRY[name] = PolicyEntry(
             name=name, description=description,
             params={p.name: p for p in params}, factory=fn,
-            forecast_driven=forecast_driven)
+            forecast_driven=forecast_driven, stateless=stateless)
         return fn
     return deco
 
@@ -96,11 +78,7 @@ def get_policy(name: str) -> PolicyEntry:
     _ensure_builtins()
     entry = _REGISTRY.get(name)
     if entry is None:
-        hint = difflib.get_close_matches(name, _REGISTRY, n=1)
-        did = f" — did you mean {hint[0]!r}?" if hint else ""
-        raise UnknownPolicyError(
-            f"unknown policy {name!r}{did} (have: "
-            f"{', '.join(sorted(_REGISTRY))})")
+        raise unknown_name_error("policy", name, list(_REGISTRY))
     return entry
 
 
@@ -156,3 +134,9 @@ def describe(markdown: bool = False) -> str:
             doc = f"  — {p.help}" if p.help else ""
             lines.append(f"    {p.describe():28s}{doc}")
     return "\n".join(lines)
+
+
+# Exported for backward compatibility: ``Param`` originally lived here.
+__all__ = ["Param", "PolicyEntry", "SpecLike", "register_policy",
+           "get_policy", "list_policies", "parse", "as_spec", "build",
+           "describe", "unknown_param_error"]

@@ -6,84 +6,46 @@ overridden, typed parameters. The textual form round-trips —
 and worker-process boundaries unchanged, and any sweep cell can be rebuilt
 from its output row alone.
 
-Grammar (whitespace around tokens is ignored)::
-
-    spec    :=  name [ '[' params ']' ]
-    name    :=  [A-Za-z0-9._-]+
-    params  :=  kv ( ',' kv )*  |  <empty>
-    kv      :=  key '=' value
-    key     :=  [A-Za-z0-9_]+
-    value   :=  any run of characters except ',' ']' '='
-
-Values are typed against the registered policy's parameter schema (see
-``repro.policy.registry``), not guessed from their spelling: ``backend=jax``
-stays a string because ``backend`` is declared ``str``, ``lam_h2o=0.7``
-becomes a float because ``lam_h2o`` is declared ``float``. Formatting uses
-``repr`` for floats, so parse∘format is exact (floats round-trip bit-for-bit
-through ``repr``/``float``).
+The grammar itself (syntax, type coercion, did-you-mean errors) lives in
+``repro.spec`` — it is shared with scenario specs and executor specs
+(``repro.experiments``). This module binds it to the *policy* registry:
+``PolicySpec`` validates through ``repro.policy.registry``, and the error
+names below keep their established identities (``UnknownPolicyError`` is
+still a ``KeyError`` for backward compatibility with the old
+``make_scheduler`` lambda-table lookup).
 """
 from __future__ import annotations
 
 import dataclasses
-import re
-from typing import Dict, List, Mapping, Tuple
+from typing import Dict, List, Tuple
 
+from repro.spec import (ParamValueError, Spec, SpecError, SpecSyntaxError,
+                        UnknownNameError, UnknownParamError, format_value,
+                        split_specs)
+from repro.spec import coerce_value as _coerce_value
+from repro.spec import parse_raw as _parse_raw
 
-class PolicySpecError(ValueError):
-    """Base class for every spec-grammar / registry error."""
+#: Backward-compatible aliases: every policy-spec error is a shared
+#: ``repro.spec`` error, so ``except PolicySpecError`` and
+#: ``except UnknownPolicyError`` keep working across the extraction.
+PolicySpecError = SpecError
+UnknownPolicyError = UnknownNameError
 
-
-class SpecSyntaxError(PolicySpecError):
-    """Malformed spec string (bad brackets, missing '=', empty key...)."""
-
-
-class UnknownPolicyError(PolicySpecError, KeyError):
-    """Spec names a policy that is not registered (KeyError for backward
-    compatibility with the old ``make_scheduler`` lambda-table lookup)."""
-
-    def __str__(self) -> str:        # KeyError would repr() the message
-        return self.args[0] if self.args else ""
-
-
-class UnknownParamError(PolicySpecError):
-    """Spec carries a parameter the policy does not declare."""
-
-
-class ParamValueError(PolicySpecError):
-    """Parameter value cannot be coerced to its declared type."""
-
-
-_NAME_RE = re.compile(r"^[A-Za-z0-9._-]+$")
-_KEY_RE = re.compile(r"^[A-Za-z0-9_]+$")
+__all__ = [
+    "PolicySpec", "PolicySpecError", "SpecSyntaxError", "UnknownPolicyError",
+    "UnknownParamError", "ParamValueError", "format_value", "coerce_value",
+    "parse_raw", "split_specs",
+]
 
 
 @dataclasses.dataclass(frozen=True)
-class PolicySpec:
+class PolicySpec(Spec):
     """A scheduler policy as data: registered name + explicit typed params.
 
     ``params`` holds only the *overridden* parameters — defaults stay with
     the registry entry, so ``str(spec)`` is terse and two specs compare equal
     exactly when they would build identically configured schedulers.
     """
-
-    name: str
-    params: Mapping[str, object] = dataclasses.field(default_factory=dict)
-
-    def __post_init__(self):
-        object.__setattr__(self, "params", dict(self.params))
-
-    # -- textual form --------------------------------------------------------
-
-    def format(self) -> str:
-        """Canonical string form (sorted params; omits brackets when empty)."""
-        if not self.params:
-            return self.name
-        kv = ",".join(f"{k}={format_value(self.params[k])}"
-                      for k in sorted(self.params))
-        return f"{self.name}[{kv}]"
-
-    def __str__(self) -> str:
-        return self.format()
 
     # -- functional updates (validated against the registry) -----------------
 
@@ -102,66 +64,10 @@ class PolicySpec:
             **{**defaults, **self.params})
 
 
-def format_value(v: object) -> str:
-    """Render one param value so that type-directed parsing recovers it."""
-    if isinstance(v, bool):
-        return "true" if v else "false"
-    if isinstance(v, float):
-        return repr(v)               # repr round-trips floats exactly
-    return str(v)
-
-
 def coerce_value(raw: object, typ: type, *, policy: str, key: str) -> object:
-    """Coerce ``raw`` (a grammar string or an already-typed Python value) to
-    the declared param type, raising ``ParamValueError`` on mismatch."""
-
-    def bad(expected: str):
-        return ParamValueError(
-            f"policy {policy!r}: parameter {key!r} expects {expected}, "
-            f"got {raw!r}")
-
-    if typ is bool:
-        if isinstance(raw, bool):
-            return raw
-        if isinstance(raw, (int, float)) and raw in (0, 1):
-            return bool(raw)
-        if isinstance(raw, str):
-            low = raw.strip().lower()
-            if low in ("true", "1", "yes", "on"):
-                return True
-            if low in ("false", "0", "no", "off"):
-                return False
-        raise bad("a bool (true/false)")
-    if typ is int:
-        if isinstance(raw, bool):
-            raise bad("an int")
-        if isinstance(raw, int):
-            return raw
-        if isinstance(raw, float) and raw == int(raw):
-            return int(raw)
-        if isinstance(raw, str):
-            try:
-                return int(raw.strip())
-            except ValueError:
-                raise bad("an int") from None
-        raise bad("an int")
-    if typ is float:
-        if isinstance(raw, bool):
-            raise bad("a float")
-        if isinstance(raw, (int, float)):
-            return float(raw)
-        if isinstance(raw, str):
-            try:
-                return float(raw.strip())
-            except ValueError:
-                raise bad("a float") from None
-        raise bad("a float")
-    if typ is str:
-        if isinstance(raw, str):
-            return raw
-        raise bad("a string")
-    raise ParamValueError(f"policy {policy!r}: parameter {key!r} declares "
-                          f"unsupported type {typ!r}")
+    """Coerce ``raw`` to the declared param type (policy-flavoured wrapper
+    over ``repro.spec.coerce_value``)."""
+    return _coerce_value(raw, typ, owner=f"policy {policy!r}", key=key)
 
 
 def parse_raw(text: str) -> Tuple[str, Dict[str, str]]:
@@ -170,57 +76,4 @@ def parse_raw(text: str) -> Tuple[str, Dict[str, str]]:
     Validates the grammar only; the registry layer (``repro.policy.parse``)
     types the values and checks the keys against the policy's schema.
     """
-    if not isinstance(text, str):
-        raise SpecSyntaxError(f"policy spec must be a string, got {text!r}")
-    s = text.strip()
-    if "[" not in s:
-        name, body = s, None
-    else:
-        name, _, rest = s.partition("[")
-        if not rest.endswith("]"):
-            raise SpecSyntaxError(f"unterminated '[' in policy spec {text!r}")
-        body = rest[:-1]
-        if "[" in body or "]" in body:
-            raise SpecSyntaxError(f"nested brackets in policy spec {text!r}")
-    name = name.strip()
-    if not _NAME_RE.match(name):
-        raise SpecSyntaxError(f"invalid policy name in spec {text!r}")
-    params: Dict[str, str] = {}
-    if body is not None and body.strip():
-        for item in body.split(","):
-            key, eq, value = item.partition("=")
-            key, value = key.strip(), value.strip()
-            if not eq:
-                raise SpecSyntaxError(
-                    f"expected key=value, got {item.strip()!r} in {text!r}")
-            if not _KEY_RE.match(key):
-                raise SpecSyntaxError(f"invalid parameter key {key!r} "
-                                      f"in {text!r}")
-            if not value:
-                raise SpecSyntaxError(f"empty value for parameter {key!r} "
-                                      f"in {text!r}")
-            if key in params:
-                raise SpecSyntaxError(f"duplicate parameter {key!r} "
-                                      f"in {text!r}")
-            params[key] = value
-    return name, params
-
-
-def split_specs(text: str) -> List[str]:
-    """Split a comma-separated list of spec strings, honouring brackets:
-    ``"a,b[x=1,y=2],c"`` -> ``["a", "b[x=1,y=2]", "c"]`` (the CLI
-    ``--schedulers`` grammar)."""
-    out: List[str] = []
-    depth, cur = 0, []
-    for ch in text:
-        if ch == "[":
-            depth += 1
-        elif ch == "]":
-            depth = max(depth - 1, 0)
-        if ch == "," and depth == 0:
-            out.append("".join(cur))
-            cur = []
-        else:
-            cur.append(ch)
-    out.append("".join(cur))
-    return [s.strip() for s in out if s.strip()]
+    return _parse_raw(text, kind="policy")

@@ -83,6 +83,34 @@ class Cluster:
             self._max_finish = finish_s
         heapq.heappush(self._completions, (finish_s, region))
 
+    # -- state handoff (sharded execution, repro.experiments.shard) ---------
+
+    def export_state(self) -> dict:
+        """Snapshot everything a later engine run needs to continue this
+        cluster mid-flight: occupancy, the completion heap, and the exact
+        utilization integrals (so a chained run reports the same cumulative
+        utilization as an unsharded one)."""
+        return dict(capacity=self.capacity.copy(), busy=self.busy.copy(),
+                    completions=list(self._completions),
+                    busy_integral_s=self.busy_integral_s,
+                    cap_integral_s=self.cap_integral_s,
+                    last_t=self._last_t, max_finish=self._max_finish,
+                    peak_busy=self.peak_busy.copy())
+
+    def restore_state(self, state: dict) -> None:
+        """Inverse of ``export_state`` (overwrites this cluster's state)."""
+        self.capacity = np.asarray(state["capacity"], np.int64).copy()
+        self.busy = np.asarray(state["busy"], np.int64).copy()
+        self._completions = list(state["completions"])
+        heapq.heapify(self._completions)
+        self.busy_integral_s = float(state["busy_integral_s"])
+        self.cap_integral_s = float(state["cap_integral_s"])
+        self._last_t = float(state["last_t"])
+        self._busy_total = int(self.busy.sum())
+        self._cap_total = int(self.capacity.sum())
+        self._max_finish = float(state["max_finish"])
+        self.peak_busy = np.asarray(state["peak_busy"], np.int64).copy()
+
     def utilization(self, horizon_s: float) -> float:
         """Busy server-seconds over *provisioned* server-seconds — the
         denominator is the time-integral of capacity, so runs with capacity

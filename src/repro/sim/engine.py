@@ -90,6 +90,31 @@ class JobRecord:
 CapacityEvent = Tuple[float, object]
 
 
+@dataclasses.dataclass
+class EngineState:
+    """Everything a follow-on ``EventSimulator.run`` needs to continue a
+    run mid-flight — the boundary-stitching handoff of sharded execution
+    (``repro.experiments.shard``).
+
+    Exported by ``run(..., stop_at=B, export_state=True)`` at the first
+    loop instant at-or-past ``B`` and consumed by the next slice's
+    ``run(slice_jobs, sched, state=...)``. A chained sequence of runs over
+    an arrival-time partition of a trace reproduces the single unsharded
+    run *exactly* — same rounds at the same instants, same placements,
+    same per-job footprints — provided the scheduler object itself is
+    carried across the chain (the state here covers only the engine:
+    clock, grid phase, pending queue, in-flight completions, capacity and
+    its event cursor, and the utilization integrals). Everything is
+    plain data (floats, ``Job`` dataclasses, small arrays), so the state
+    also crosses process boundaries via pickle.
+    """
+    now: float                      # engine clock == current grid instant
+    pending: List[Job]              # arrived but not yet placed, queue order
+    applied_events: int             # capacity-event cursor
+    cluster: Dict                   # Cluster.export_state() payload
+    rounds: int = 0                 # cumulative scheduler rounds so far
+
+
 def resolve_scheduler(scheduler, tele):
     """Materialize ``scheduler`` against ``tele``: policy-spec strings and
     ``PolicySpec`` objects are built through the registry; anything already
@@ -124,24 +149,38 @@ class EventSimulator:
     # -- batched footprint accounting ---------------------------------------
 
     def _account_all(self, placed: List[Tuple[Job, int, float, float]]
-                     ) -> List[JobRecord]:
-        """One vectorized accounting pass over every placed job."""
+                     ) -> Tuple[List[JobRecord], Dict[str, np.ndarray]]:
+        """One vectorized accounting pass over every placed job.
+
+        Returns the per-job records plus a columnar *frame* of the same
+        data (placement order preserved): metrics aggregation
+        (``sim.metrics.summarize``, stress-weighted water) runs on the
+        arrays instead of looping over 100k+ record objects, and sharded
+        workers ship the frame across process boundaries instead of
+        pickling record lists. Frames from an arrival-time-sharded run
+        concatenate into exactly the serial run's frame, so array
+        reductions over them are bit-identical.
+        """
+        n = len(placed)
         if not placed:
-            return []
+            return [], {k: np.zeros(0) for k in
+                        ("job_id", "region", "home_region", "start_s",
+                         "finish_s", "submit_s", "exec_s", "tolerance",
+                         "carbon_g", "water_l")}
         te = self.tele
-        region = np.fromiter((p[1] for p in placed), np.int64, len(placed))
-        start = np.fromiter((p[2] for p in placed), np.float64, len(placed))
+        region = np.fromiter((p[1] for p in placed), np.int64, n)
+        start = np.fromiter((p[2] for p in placed), np.float64, n)
         t_eff = np.fromiter(
             (p[0].exec_time_s * p[0].time_scale for p in placed),
-            np.float64, len(placed))
+            np.float64, n)
         e_eff = np.fromiter(
             (p[0].energy_kwh * p[0].energy_scale for p in placed),
-            np.float64, len(placed))
+            np.float64, n)
         if self.cfg.integrate:
             m = te.mean_over(start, start + t_eff)
         else:
             m = te.at_many(start)
-        rows = np.arange(len(placed))
+        rows = np.arange(n)
         ci = m["ci"][rows, region]
         ewif = m["ewif"][rows, region]
         wue = m["wue"][rows, region]
@@ -149,12 +188,53 @@ class EventSimulator:
         carbon = footprint.job_carbon(e_eff, t_eff, ci, server)
         water = footprint.job_water(e_eff, t_eff, te.pue[region], ewif, wue,
                                     te.wsf[region], server)
-        return [JobRecord(job, int(n), float(s), float(f), float(c), float(w))
-                for (job, n, s, f), c, w in zip(placed, carbon, water)]
+        frame = dict(
+            job_id=np.fromiter((p[0].job_id for p in placed), np.int64, n),
+            region=region,
+            home_region=np.fromiter((p[0].home_region for p in placed),
+                                    np.int64, n),
+            start_s=start,
+            finish_s=np.fromiter((p[3] for p in placed), np.float64, n),
+            submit_s=np.fromiter((p[0].submit_time_s for p in placed),
+                                 np.float64, n),
+            exec_s=np.fromiter((p[0].exec_time_s for p in placed),
+                               np.float64, n),
+            tolerance=np.fromiter((p[0].tolerance for p in placed),
+                                  np.float64, n),
+            carbon_g=np.asarray(carbon, np.float64),
+            water_l=np.asarray(water, np.float64))
+        records = [JobRecord(job, int(nn), float(s), float(f), float(c),
+                             float(w))
+                   for (job, nn, s, f), c, w in zip(placed, carbon, water)]
+        return records, frame
 
     # -- main loop -----------------------------------------------------------
 
-    def run(self, jobs: Sequence[Job], scheduler) -> Dict:
+    def run(self, jobs: Sequence[Job], scheduler, *,
+            state: Optional[EngineState] = None,
+            stop_at: Optional[float] = None,
+            export_state: bool = False,
+            hold_grid: bool = False) -> Dict:
+        """Replay ``jobs`` through ``scheduler``.
+
+        ``state`` resumes a previous run's exported ``EngineState`` (the
+        sharded-execution handoff); ``stop_at=B`` halts the loop at the
+        first instant at-or-past ``B`` — pretending further arrivals exist
+        beyond ``B`` rather than draining/stalling, so a later resumed run
+        observes exactly the engine a single uninterrupted run would have
+        had there; ``export_state=True`` attaches the boundary state as
+        ``result["state"]``. Chained ``run(slice, ..., state=prev)`` calls
+        over an arrival-time partition reproduce the unsharded run
+        bit-for-bit (pinned in tests/test_experiments.py).
+
+        ``hold_grid=True`` ticks the round grid through idle stretches
+        instead of re-anchoring at the next arrival. A *speculative*
+        warm-up run (sharded execution) starts from an empty fleet that
+        the real run would have had busy; holding the grid keeps its round
+        instants bit-aligned with the real run's ``now += w``
+        accumulation, so the warm-up can converge to the exact engine
+        state of the unsharded run at the shard boundary.
+        """
         scheduler = resolve_scheduler(scheduler, self.tele)
         w = self.cfg.window_s
         jobs = sorted(jobs, key=lambda j: j.submit_time_s)
@@ -167,9 +247,18 @@ class EventSimulator:
         i = 0          # arrival cursor
         ce = 0         # capacity-event cursor
         now = 0.0
+        prior_rounds = 0
+        if state is not None:
+            cluster.restore_state(state.cluster)
+            pending = list(state.pending)
+            ce = int(state.applied_events)
+            now = float(state.now)
+            prior_rounds = int(state.rounds)
         rounds = 0
         stalls = 0
         while i < n_jobs or pending or cluster.busy_any():
+            if stop_at is not None and now >= stop_at:
+                break
             while ce < len(cap_events) and cap_events[ce][0] <= now:
                 t_event, payload = cap_events[ce]
                 # Settle busy/provisioned integrals up to the event instant
@@ -203,9 +292,13 @@ class EventSimulator:
             # capacity event may still unblock them (outage restoration), and
             # a temporal-shifting scheduler may be holding them *on purpose*
             # (Decision.wake_s names its planned release) — fast-forward to
-            # the earlier of the two rather than stalling out.
-            if pending and not progressed and not cluster.busy_any() \
-                    and i >= n_jobs:
+            # the earlier of the two rather than stalling out. With a
+            # ``stop_at`` boundary, later slices hold more arrivals, so a
+            # single uninterrupted run would never take this branch here
+            # (its arrival cursor is not exhausted) — skip it and keep
+            # rounds marching toward the boundary instead.
+            if stop_at is None and pending and not progressed \
+                    and not cluster.busy_any() and i >= n_jobs:
                 wake = getattr(dec, "wake_s", None)
                 targets = []
                 if ce < len(cap_events):
@@ -237,22 +330,55 @@ class EventSimulator:
                     while t < nxt and drain > t:
                         t += w
                     now = t if t >= nxt else nxt
+                elif hold_grid:
+                    # Speculative warm-up: the real fleet would be busy
+                    # here, so keep accumulating the grid instead of
+                    # re-anchoring at the arrival.
+                    t = now + w
+                    while t < nxt:
+                        t += w
+                    now = t
                 else:
                     now = nxt                 # fully idle: fast-forward
             elif cluster.busy_any():
-                now = cluster.drain_time()    # no more work: drain and stop
+                if stop_at is None:
+                    now = cluster.drain_time()   # no more work: drain, stop
+                else:
+                    # Next arrivals live beyond the handoff boundary: tick
+                    # the grid toward it exactly as the single run would
+                    # tick toward that (>= stop_at) arrival, preserving the
+                    # float-accumulated grid phase across the handoff.
+                    drain = cluster.drain_time()
+                    t = now + w
+                    while t < stop_at and drain > t:
+                        t += w
+                    now = t
             else:
                 break
         cluster.advance(now)
         horizon = max(now, cluster.drain_time(), 1.0)
-        return dict(records=self._account_all(placed), windows=rounds,
-                    rounds=rounds,
-                    solve_times=np.asarray(getattr(scheduler, "solve_times",
-                                                   [])),
-                    utilization=cluster.utilization(horizon),
-                    peak_busy=cluster.peak_busy.copy(),
-                    horizon_s=horizon,
-                    unfinished=len(pending))
+        records, frame = self._account_all(placed)
+        result = dict(records=records, frame=frame,
+                      windows=prior_rounds + rounds,
+                      rounds=prior_rounds + rounds,
+                      solve_times=np.asarray(getattr(scheduler, "solve_times",
+                                                     [])),
+                      utilization=cluster.utilization(horizon),
+                      peak_busy=cluster.peak_busy.copy(),
+                      horizon_s=horizon,
+                      drain_s=cluster.drain_time(),
+                      busy_integral_s=cluster.busy_integral_s,
+                      cap_integral_s=cluster.cap_integral_s,
+                      unfinished=len(pending) + (n_jobs - i))
+        if export_state:
+            # Arrivals the loop never consumed (all below ``stop_at`` by
+            # slicing) join the carried queue in submit order — exactly the
+            # order the single run would have appended them in.
+            result["state"] = EngineState(
+                now=now, pending=pending + jobs[i:], applied_events=ce,
+                cluster=cluster.export_state(),
+                rounds=prior_rounds + rounds)
+        return result
 
 
 class WindowedSimulator:

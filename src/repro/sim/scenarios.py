@@ -30,18 +30,14 @@ The builder must be deterministic in its arguments (property-tested).
 """
 from __future__ import annotations
 
-import concurrent.futures
 import dataclasses
 import os
-import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core import telemetry
 from repro.core.problem import Job
-from repro.sim.engine import EventSimulator, SimConfig
-from repro.sim.metrics import savings_vs, summarize
 from repro.sim.trace import (DAY, alibaba_trace, borg_trace,
                              scale_capacity_for_utilization)
 
@@ -65,11 +61,40 @@ class ScenarioInstance:
     forecast_noise: float = 0.0
 
 
+#: Help strings for builder params surfaced through the ScenarioSpec
+#: grammar (``repro.experiments``); the builder signatures stay the single
+#: source of truth for names, types, and defaults.
+_PARAM_HELP = {
+    "trace": "trace generator (borg / alibaba)",
+    "tolerance": "delay tolerance TOL (fraction of exec time of slack)",
+    "ewif_table": "water-intensity dataset (macknick / wri)",
+}
+
+
 @dataclasses.dataclass(frozen=True)
 class Scenario:
     name: str
     description: str
     build: Callable[..., ScenarioInstance]
+
+    @property
+    def params(self):
+        """Builder-specific typed params (beyond the shared cell params of
+        ``repro.experiments.scenario.CELL_PARAMS``), introspected from the
+        builder signature. Builders that forward ``**kw`` inherit
+        ``_base``'s keyword params (``trace``, ``tolerance``,
+        ``ewif_table``); non-spec-expressible arguments (``regions``) stay
+        build-kwargs-only. Introspection keeps the documented defaults
+        from ever drifting from the code."""
+        from repro.spec import has_var_keyword, params_from_signature
+        ps = params_from_signature(self.build, drop_positional=4,
+                                   help_text=_PARAM_HELP)
+        if has_var_keyword(self.build):
+            seen = {p.name for p in ps}
+            ps += [p for p in params_from_signature(_base, drop_positional=4,
+                                                    help_text=_PARAM_HELP)
+                   if p.name not in seen]
+        return {p.name: p for p in ps}
 
 
 _REGISTRY: Dict[str, Scenario] = {}
@@ -86,12 +111,37 @@ def register(name: str, description: str):
 
 def get_scenario(name: str) -> Scenario:
     if name not in _REGISTRY:
-        raise KeyError(f"unknown scenario {name!r}; have {sorted(_REGISTRY)}")
+        from repro.spec import unknown_name_error
+        raise unknown_name_error("scenario", name, list(_REGISTRY))
     return _REGISTRY[name]
 
 
 def list_scenarios() -> List[str]:
     return sorted(_REGISTRY)
+
+
+def describe(markdown: bool = False) -> str:
+    """Human-readable scenario-registry dump (the ``--list-scenarios``
+    surface and the source of the README scenario table). Lists each
+    scenario's builder-specific params; the shared cell params (``days``,
+    ``seed``, ``jobs_per_day``, ``utilization``, ``window_s``) apply to
+    every scenario and are documented once by the experiments API."""
+    entries = [_REGISTRY[n] for n in sorted(_REGISTRY)]
+    if markdown:
+        lines = ["| scenario | extra parameters | description |",
+                 "|---|---|---|"]
+        for e in entries:
+            ps = ", ".join(f"`{p.describe()}`" for p in e.params.values()) \
+                or "—"
+            lines.append(f"| `{e.name}` | {ps} | {e.description} |")
+        return "\n".join(lines)
+    lines = []
+    for e in entries:
+        lines.append(f"{e.name:24s} {e.description}")
+        for p in e.params.values():
+            doc = f"  — {p.help}" if p.help else ""
+            lines.append(f"    {p.describe():28s}{doc}")
+    return "\n".join(lines)
 
 
 # ---------------------------------------------------------------------------
@@ -164,6 +214,14 @@ def _base(days: float, seed: int, jobs_per_day: float, utilization: float,
 @register("nominal", "Borg-like steady trace, unperturbed telemetry")
 def _nominal(days, seed, jobs_per_day, utilization, **kw):
     return _base(days, seed, jobs_per_day, utilization, **kw)
+
+
+@register("diurnal",
+          "alias of 'nominal': Borg-like diurnally modulated steady trace, "
+          "unperturbed telemetry (the sharding examples' canonical cell)")
+def _diurnal(days, seed, jobs_per_day, utilization, **kw):
+    inst = _base(days, seed, jobs_per_day, utilization, **kw)
+    return dataclasses.replace(inst, name="diurnal")
 
 
 @register("drought-summer",
@@ -312,8 +370,14 @@ def register_csv_scenario(name: str, path: str, *,
 
 
 # ---------------------------------------------------------------------------
-# Sweep runner
+# Sweep runner — thin shims over the declarative experiment API
 # ---------------------------------------------------------------------------
+# The cell/sweep machinery lives in ``repro.experiments`` now: scenarios are
+# addressed by ScenarioSpec strings ("diurnal[days=10,jobs_per_day=1e6]"),
+# grids by ExperimentPlan, and execution by interchangeable backends
+# (serial / process / sharded). These shims keep the established kwargs
+# surface working and produce identical rows.
+
 
 def run_cell(scenario: str, scheduler, *, days: float = 0.2,
              seed: int = 0, jobs_per_day: float = 23000.0,
@@ -323,69 +387,44 @@ def run_cell(scenario: str, scheduler, *, days: float = 0.2,
              build_kwargs: Optional[Dict] = None,
              return_result: bool = False) -> Dict:
     """Build one scenario instance, run one scheduler through it, and return
-    a tidy result row. Deterministic in its arguments; safe to run in a
-    worker process (everything is rebuilt from primitives).
+    a tidy result row (shim over ``repro.experiments.run_cell``).
 
     ``scheduler`` is a policy spec — a ``repro.policy.PolicySpec`` or its
     string form (``"waterwise[lam_h2o=0.7,backend=jax]"``). ``sched_kwargs``
     are merged into the spec as validated overrides: unknown or ill-typed
     params raise with a did-you-mean message for *every* policy (nothing is
-    silently dropped any more). The row's ``spec`` column is the fully
-    resolved spec string — re-parsing it reproduces the cell's scheduler
-    exactly, so any sweep CSV line is self-describing.
+    silently dropped). The row's ``spec`` column is the fully resolved spec
+    string and its ``scenario_spec`` column the fully resolved scenario
+    spec — re-parsing either reproduces the cell exactly.
 
-    ``tolerance`` overrides the builders' default delay tolerance (the
-    temporal-shifting dimension: TOL×exec_time of slack per job) and
-    ``build_kwargs`` forwards further builder kwargs (``trace``,
-    ``ewif_table``, ``regions``, ... — whatever the scenario's builder
-    accepts). Forecast-driven policies additionally report
-    ``forecast_mape`` (realized % error of the forecasts they acted on),
-    ``mean_defer_s`` (average intentional hold), and ``deferred_pct``;
-    scenarios with a forecast-error regime inject their bias/noise into
-    the spec (visible in the ``spec`` column). ``return_result=True``
+    ``tolerance`` overrides the builders' default delay tolerance and
+    ``build_kwargs`` forwards further builder kwargs: spec-expressible ones
+    (``trace``, ``ewif_table``, ...) fold into the scenario spec; the rest
+    (``regions`` objects) stay in-process extras. ``return_result=True``
     attaches the raw engine result dict as ``row["_result"]`` (in-process
     use only; never serialized into sweep CSVs).
     """
-    from repro import policy
-    from repro.core import solvers
+    from repro import experiments, policy
 
-    solvers.available_backends()     # one-time backend imports, off the clock
     spec = policy.as_spec(scheduler)
     if sched_kwargs:
         spec = spec.with_params(**sched_kwargs)
-    build_kw = dict(build_kwargs or {})
+    params = dict(days=days, seed=seed, jobs_per_day=jobs_per_day,
+                  utilization=utilization, window_s=window_s)
     if tolerance is not None:
-        build_kw["tolerance"] = tolerance
-    inst = get_scenario(scenario).build(days, seed, jobs_per_day, utilization,
-                                        **build_kw)
-    if policy.get_policy(spec.name).forecast_driven \
-            and (inst.forecast_bias != 1.0 or inst.forecast_noise > 0.0):
-        spec = spec.with_defaults(forecast_bias=inst.forecast_bias,
-                                  forecast_noise=inst.forecast_noise,
-                                  forecast_seed=seed)
-    sched = policy.build(spec, inst.tele)
-    sim = EventSimulator(inst.tele, inst.capacity,
-                         SimConfig(window_s=window_s),
-                         capacity_events=inst.capacity_events)
-    t0 = time.perf_counter()
-    result = sim.run(inst.jobs, sched)
-    wall = time.perf_counter() - t0
-    row = dict(scenario=scenario, scheduler=spec.name, spec=str(spec),
-               **summarize(result))
-    row["wall_s"] = wall
-    row["unfinished"] = result["unfinished"]
-    weight = (inst.water_weight if inst.water_weight is not None
-              else np.ones(inst.tele.num_regions))
-    row["stress_water_kl"] = float(
-        sum(r.water_l * weight[r.region] for r in result["records"]) / 1e3)
-    if hasattr(sched, "forecast_mape"):
-        row["forecast_mape"] = float(sched.forecast_mape)
-        row["mean_defer_s"] = float(sched.mean_defer_s)
-        row["deferred_pct"] = (100.0 * sched.deferred_jobs
-                               / max(len(inst.jobs), 1))
-    if return_result:
-        row["_result"] = result
-    return row
+        params["tolerance"] = tolerance
+    from repro.spec import SPEC_TYPES
+    schema = experiments.scenario_schema(scenario)
+    extra = {}
+    for k, v in (build_kwargs or {}).items():
+        if k in schema and k not in params and type(v) in SPEC_TYPES:
+            params[k] = v
+        else:
+            extra[k] = v
+    cell = experiments.Cell(
+        experiments.make_scenario_spec(scenario, **params), spec)
+    return experiments.run_cell(cell, extra_build_kwargs=extra or None,
+                                return_result=return_result)
 
 
 def sweep(schedulers: Sequence, scenarios: Optional[Sequence[str]] = None,
@@ -393,89 +432,61 @@ def sweep(schedulers: Sequence, scenarios: Optional[Sequence[str]] = None,
           jobs_per_day: float = 23000.0, utilization: float = 0.15,
           window_s: float = 30.0, tolerance: Optional[float] = None,
           sched_kwargs: Optional[Dict] = None,
-          max_workers: Optional[int] = None) -> List[Dict]:
-    """Run the schedulers × scenarios cross product; one tidy row per cell.
+          max_workers: Optional[int] = None,
+          executor: Optional[str] = None) -> List[Dict]:
+    """Run the schedulers × scenarios cross product; one tidy row per cell
+    (shim over ``repro.experiments.ExperimentPlan``).
 
-    ``schedulers`` are policy specs — strings like
-    ``"waterwise-forecast[horizon_slots=8]"`` or ``PolicySpec`` objects —
-    validated up front so a typo'd policy or param fails before any cell
-    runs. ``max_workers > 1`` fans cells out over worker processes (each
-    cell is independent and deterministic, so parallel and serial sweeps
-    produce identical rows). Defaults to the CPU count capped by the cell
-    count. Within each scenario, savings percentages are attached relative
-    to the ``baseline`` scheduler when it is part of the sweep.
+    ``schedulers`` are policy specs and ``scenarios`` scenario names —
+    validated up front so a typo'd name or param fails before any cell
+    runs. ``executor`` picks the backend (``"serial"``, ``"process"``,
+    ``"sharded[shards=4]"``); by default cells fan out over worker
+    processes capped at ``max_workers`` (serial and parallel sweeps
+    produce identical rows). Within each scenario, savings percentages are
+    attached relative to the ``baseline`` scheduler when it is part of the
+    sweep.
+
+    A crashed cell no longer aborts the sweep: every other cell finishes,
+    the failed cell's row records the failure in its ``error`` column, and
+    a ``repro.experiments.CellError`` naming the failing (scenario, spec)
+    pair is raised at the end with all rows attached as ``err.rows``.
     """
-    from repro import policy
-    scenarios = list(scenarios) if scenarios is not None else list_scenarios()
-    for s in scenarios:
-        get_scenario(s)          # fail fast on typos
-    specs = [policy.as_spec(s) for s in schedulers]   # fail fast on typos
-    cells = [(sc, sd) for sc in scenarios for sd in specs]
-    kw = dict(days=days, seed=seed, jobs_per_day=jobs_per_day,
-              utilization=utilization, window_s=window_s,
-              tolerance=tolerance, sched_kwargs=sched_kwargs)
-    if max_workers is None:
-        max_workers = min(os.cpu_count() or 1, len(cells))
-    rows: List[Dict] = []
-    if max_workers > 1 and len(cells) > 1:
-        with concurrent.futures.ProcessPoolExecutor(max_workers) as pool:
-            futs = [pool.submit(run_cell, sc, sd, **kw) for sc, sd in cells]
-            rows = [f.result() for f in futs]
-    else:
-        rows = [run_cell(sc, sd, **kw) for sc, sd in cells]
-    # Savings relative to the in-scenario baseline scheduler.
-    by_scenario: Dict[str, Dict] = {}
-    for row in rows:
-        if row["scheduler"] == "baseline":
-            by_scenario[row["scenario"]] = row
-    for row in rows:
-        base = by_scenario.get(row["scenario"])
-        if base is not None:
-            row.update(savings_vs(base, row))
-            bw = base["stress_water_kl"]
-            row["stress_water_savings_pct"] = (
-                100.0 * (bw - row["stress_water_kl"]) / bw if bw else 0.0)
-    return rows
+    from repro import experiments, policy
+
+    names = list(scenarios) if scenarios is not None else list_scenarios()
+    specs = []
+    for s in schedulers:
+        sp = policy.as_spec(s)                       # fail fast on typos
+        if sched_kwargs:
+            sp = sp.with_params(**sched_kwargs)
+        specs.append(sp)
+    params = dict(days=days, seed=seed, jobs_per_day=jobs_per_day,
+                  utilization=utilization, window_s=window_s)
+    if tolerance is not None:
+        params["tolerance"] = tolerance
+    scen_specs = [experiments.make_scenario_spec(n, **params) for n in names]
+    plan = experiments.ExperimentPlan(tuple(scen_specs), tuple(specs))
+    n_cells = len(scen_specs) * len(specs)
+    if executor is None:
+        if max_workers is None:
+            max_workers = min(os.cpu_count() or 1, n_cells)
+        executor = "process" if (max_workers > 1 and n_cells > 1) \
+            else "serial"
+    options = {}
+    if executor.startswith("process") and max_workers is not None:
+        options["max_workers"] = max_workers
+    return plan.run(executor=executor, strict=True, **options)
 
 
-# "unfinished" stays in the default view: a scheduler that strands jobs
-# accrues less footprint than one that ran everything — savings read from a
-# row with unfinished > 0 are not comparable to the baseline's.
-_TABLE_COLS = ("scenario", "scheduler", "jobs", "unfinished", "carbon_kg",
-               "water_kl", "stress_water_kl", "carbon_savings_pct",
-               "water_savings_pct", "violation_pct", "mean_service_ratio",
-               "wall_s")
-_CSV_COLS = _TABLE_COLS + ("stress_water_savings_pct", "p99_service_ratio",
-                           "utilization", "mean_solve_ms", "moved_pct",
-                           "forecast_mape", "mean_defer_s", "deferred_pct",
-                           "spec")
-
-
-def to_table(rows: Sequence[Dict], cols: Sequence[str] = _TABLE_COLS) -> str:
-    """Fixed-width tidy table (one line per sweep cell)."""
-    def fmt(v):
-        if isinstance(v, float):
-            return f"{v:.2f}"
-        return str(v)
-    table = [[fmt(r.get(c, "")) for c in cols] for r in rows]
-    widths = [max(len(c), *(len(t[i]) for t in table)) if table else len(c)
-              for i, c in enumerate(cols)]
-    lines = ["  ".join(c.ljust(w) for c, w in zip(cols, widths))]
-    lines.append("  ".join("-" * w for w in widths))
-    for t in table:
-        lines.append("  ".join(v.rjust(w) for v, w in zip(t, widths)))
-    return "\n".join(lines)
+def to_table(rows: Sequence[Dict], cols: Optional[Sequence[str]] = None
+             ) -> str:
+    """Fixed-width tidy table (shim over ``repro.experiments.to_table``)."""
+    from repro import experiments
+    return experiments.to_table(rows, cols or experiments.TABLE_COLS)
 
 
 def to_csv(rows: Sequence[Dict], path: str,
-           cols: Sequence[str] = _CSV_COLS) -> None:
-    """Write tidy rows as CSV. Uses the stdlib writer so the ``spec`` column
-    — whose bracketed params contain commas — is quoted and every row stays
-    re-parseable (``policy.parse(row["spec"])`` rebuilds the cell's
-    scheduler)."""
-    import csv
-    with open(path, "w", newline="") as f:
-        w = csv.writer(f)
-        w.writerow(cols)
-        for r in rows:
-            w.writerow([r.get(c, "") for c in cols])
+           cols: Optional[Sequence[str]] = None) -> None:
+    """Write tidy rows as CSV (shim over ``repro.experiments.to_csv``)."""
+    from repro import experiments
+    experiments.to_csv(rows, path, cols or experiments.CSV_COLS)

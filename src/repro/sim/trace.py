@@ -194,6 +194,74 @@ def rescale_arrival_rate(jobs: Sequence[Job], days: float,
     return [j for j, k in zip(jobs, keep) if k]
 
 
+# ---------------------------------------------------------------------------
+# Arrival-time sharding (repro.experiments sharded executor)
+# ---------------------------------------------------------------------------
+
+def pick_shard_boundaries(jobs: Sequence[Job], shards: int,
+                          window_frac: float = 0.1) -> List[float]:
+    """Choose ``shards - 1`` boundary times that split ``jobs`` into
+    near-equal-count, arrival-contiguous slices.
+
+    Each boundary starts at the exact count quantile, then snaps to the
+    *largest arrival gap* within ±``window_frac`` of a slice's worth of
+    jobs around it, and lands at the midpoint of that gap. Wide gaps
+    maximize the chance that the fleet has fully drained at the boundary —
+    the condition under which an optimistically (independently) executed
+    slice is bit-identical to its stretch of the unsharded run, so the
+    sharded executor keeps its parallel results instead of falling back.
+
+    Deterministic in its arguments; boundaries are strictly increasing and
+    never touch an arrival instant (so slicing is unambiguous). Degenerate
+    requests (more shards than distinct arrivals) yield fewer boundaries.
+    """
+    if shards <= 1 or len(jobs) < 2:
+        return []
+    t = np.sort(np.asarray([j.submit_time_s for j in jobs], np.float64))
+    n = t.size
+    gaps = np.diff(t)                       # gap g lies between t[g], t[g+1]
+    half = max(int(n / shards * window_frac), 1)
+    out: List[float] = []
+    for k in range(1, shards):
+        q = int(round(k * n / shards))      # first index of the next slice
+        if q < 1 or q > n - 1:
+            continue                        # no arrivals left to split off
+        lo = max(q - half, 1)
+        hi = min(q + half, n - 1)
+        if lo > hi:
+            lo = hi = q
+        g = lo - 1 + int(np.argmax(gaps[lo - 1:hi]))
+        b = 0.5 * (t[g] + t[g + 1])
+        if out and b <= out[-1]:
+            continue                        # collapsed with previous boundary
+        if t[g + 1] <= b or b <= t[g]:
+            continue                        # zero-width gap: unusable
+        out.append(float(b))
+    return out
+
+
+def slice_by_arrival(jobs: Sequence[Job],
+                     boundaries: Sequence[float]) -> List[List[Job]]:
+    """Partition ``jobs`` into ``len(boundaries) + 1`` arrival-time slices:
+    slice ``k`` holds exactly the jobs with ``B_k <= submit < B_{k+1}``
+    (``B_0 = -inf``, ``B_last = +inf``).
+
+    An exact partition — every job lands in exactly one slice (no loss, no
+    duplication) and the input's relative order is preserved within each
+    slice (hypothesis-property-tested in tests/test_experiments.py).
+    """
+    bounds = sorted(float(b) for b in boundaries)
+    out: List[List[Job]] = [[] for _ in range(len(bounds) + 1)]
+    if not bounds:
+        out[0] = list(jobs)
+        return out
+    edges = np.asarray(bounds, np.float64)
+    for j in jobs:
+        k = int(np.searchsorted(edges, j.submit_time_s, side="right"))
+        out[k].append(j)
+    return out
+
+
 def scale_capacity_for_utilization(jobs: Sequence[Job], days: float,
                                    num_regions: int,
                                    utilization: float = 0.15) -> np.ndarray:
