@@ -1,0 +1,88 @@
+"""Forecast-quality benchmark: every registered forecaster + the oracle,
+walk-forward on one telemetry signal.
+
+  PYTHONPATH=src python -m benchmarks.run --forecast-bench
+  PYTHONPATH=src python -m benchmarks.run --forecast-bench \\
+      --days 10 --train-steps 600 --signal wue
+
+One row per model: walk-forward MAPE (%), pinball loss at the 10/90 band,
+band coverage, number of origins, and wall seconds (the learned row's wall
+is dominated by its training time; ``--refit-every`` sets the walk-forward
+full-refit cadence). The oracle row reads the true future — it must
+lower-bound every model's MAPE, and this module asserts that ordering so
+the CI smoke run is a real check, not just a render.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Sequence
+
+
+def run_bench(days: float = 10.0, seed: int = 0, signal: str = "ci", *,
+              horizon: int = 6, warmup: Optional[int] = None, stride: int = 6,
+              refit_every: int = 4, train_steps: int = 300,
+              models: Optional[Sequence[str]] = None) -> List[Dict]:
+    """Backtest every model (+ oracle) on one telemetry signal; returns
+    tidy rows sorted by MAPE and asserts the oracle lower-bounds them.
+
+    ``warmup=None`` auto-sizes the first origin: 7 days of history when the
+    series is long enough for a few origins after it, else 4 days (the
+    minimum the learned forecaster trains on), so tiny CI runs still
+    exercise the real training path.
+    """
+    from repro import forecast
+    from repro.core import telemetry
+
+    tele = telemetry.generate(days=max(int(round(days)), 1), seed=seed)
+    if warmup is None:
+        T = tele.ci.shape[0]
+        warmup = 168 if T - 168 - horizon >= 2 * stride else 96
+        if T - warmup - horizon < 0:
+            raise ValueError(f"telemetry too short ({T}h) for the bench "
+                             f"(needs ≥ {96 + horizon}h; raise --days)")
+    names = list(models) if models else forecast.list_forecasters() + ["oracle"]
+    rows: List[Dict] = []
+    for name in names:
+        kw = dict(train_steps=train_steps, seed=seed) \
+            if name == "learned" else {}
+        t0 = time.perf_counter()
+        r = forecast.backtest_telemetry(
+            tele, signal, name, horizon=horizon, warmup=warmup,
+            stride=stride, refit_every=refit_every, **kw)
+        rows.append(dict(forecaster=name, mape=r["mape"],
+                         pinball=r["pinball"], coverage=r["coverage"],
+                         n_origins=r["n_origins"],
+                         wall_s=time.perf_counter() - t0))
+    if "oracle" in names:
+        oracle = next(r for r in rows if r["forecaster"] == "oracle")
+        best = min(r["mape"] for r in rows)
+        assert oracle["mape"] <= best + 1e-9, \
+            "oracle must lower-bound every model's walk-forward MAPE"
+    rows.sort(key=lambda r: r["mape"])
+    return rows
+
+
+def to_table(rows: Sequence[Dict]) -> str:
+    """Render through the shared experiments table layout (floats
+    pre-formatted to 3 decimals — forecast metrics need the precision)."""
+    from repro import experiments
+
+    cols = ("forecaster", "mape", "pinball", "coverage", "n_origins",
+            "wall_s")
+    fmt_rows = [{c: (f"{r[c]:.3f}" if isinstance(r.get(c), float)
+                     else r.get(c, "")) for c in cols} for r in rows]
+    return experiments.to_table(fmt_rows, cols, ci=False)
+
+
+def main(args) -> None:
+    # The telemetry generator takes whole days; report what actually ran.
+    days = max(int(round(args.days)), 1) if args.days is not None else 10
+    t0 = time.time()
+    rows = run_bench(days=days, seed=args.seed, signal=args.signal,
+                     refit_every=args.refit_every,
+                     train_steps=args.train_steps,
+                     warmup=args.warmup)
+    print(to_table(rows))
+    print(f"\n# forecast-bench: signal={args.signal!r}, {days}-day "
+          f"telemetry, train_steps={args.train_steps}, "
+          f"{time.time() - t0:.1f}s wall (oracle ≤ every model: ok)")

@@ -23,10 +23,19 @@ Experiment plans are JSON artifacts: ``--save-plan plan.json`` writes the
 sweep's (scenarios × policies × seeds) grid without running it;
 ``--plan plan.json`` runs a saved plan.
 
+Forecast-quality benchmark (every registered forecaster + the oracle,
+walk-forward MAPE / pinball / coverage on one telemetry signal; asserts the
+oracle lower-bounds every model):
+
+  PYTHONPATH=src python -m benchmarks.run --forecast-bench
+  PYTHONPATH=src python -m benchmarks.run --forecast-bench \\
+      --days 10 --train-steps 600 --signal wue
+
 Registries (names, accepted params, descriptions):
 
-  PYTHONPATH=src python -m benchmarks.run --list-schedulers [--markdown]
-  PYTHONPATH=src python -m benchmarks.run --list-scenarios  [--markdown]
+  PYTHONPATH=src python -m benchmarks.run --list-schedulers  [--markdown]
+  PYTHONPATH=src python -m benchmarks.run --list-scenarios   [--markdown]
+  PYTHONPATH=src python -m benchmarks.run --list-forecasters [--markdown]
 """
 from __future__ import annotations
 
@@ -43,6 +52,11 @@ def list_schedulers(markdown: bool) -> None:
 def list_scenarios(markdown: bool) -> None:
     from repro import experiments
     print(experiments.describe_scenarios(markdown=markdown))
+
+
+def list_forecasters(markdown: bool) -> None:
+    from repro import forecast
+    print(forecast.describe_forecasters(markdown=markdown))
 
 
 def build_plan(args):
@@ -139,6 +153,23 @@ def main() -> None:
                          "and exit")
     ap.add_argument("--list-scenarios", action="store_true",
                     help="print the scenario registry and exit")
+    ap.add_argument("--list-forecasters", action="store_true",
+                    help="print the forecaster registry and exit")
+    ap.add_argument("--forecast-bench", action="store_true",
+                    help="run the forecast-quality benchmark (walk-forward "
+                         "MAPE/pinball/coverage per registered forecaster)")
+    ap.add_argument("--signal", default="ci",
+                    help="with --forecast-bench: telemetry signal to "
+                         "forecast (ci / ewif / wue / water_intensity)")
+    ap.add_argument("--train-steps", type=int, default=300,
+                    help="with --forecast-bench: learned-forecaster "
+                         "training steps per refit")
+    ap.add_argument("--refit-every", type=int, default=4,
+                    help="with --forecast-bench: walk-forward full-refit "
+                         "cadence in origins (updates in between)")
+    ap.add_argument("--warmup", type=int, default=None,
+                    help="with --forecast-bench: first origin (hours of "
+                         "history; default auto-sizes to the series)")
     ap.add_argument("--markdown", action="store_true",
                     help="with --list-schedulers/--list-scenarios: emit the "
                          "markdown table embedded in README.md")
@@ -161,6 +192,39 @@ def main() -> None:
     if args.list_scenarios:
         list_scenarios(args.markdown)
         return
+    if args.list_forecasters:
+        list_forecasters(args.markdown)
+        return
+    if args.forecast_bench:
+        sweep_flags = dict(sweep=args.sweep, scenarios=args.scenarios != "",
+                           schedulers=args.schedulers
+                           != ap.get_default("schedulers"),
+                           executor=args.executor
+                           != ap.get_default("executor"),
+                           shards=args.shards is not None,
+                           seeds=args.seeds != "", plan=args.plan != "",
+                           save_plan=args.save_plan != "",
+                           workers=args.workers is not None,
+                           tolerance=args.tolerance is not None,
+                           trace_csv=args.trace_csv != "",
+                           jobs_per_day=args.jobs_per_day is not None)
+        if any(sweep_flags.values()):
+            ap.error("--" + ", --".join(k.replace("_", "-")
+                                        for k, v in sweep_flags.items() if v)
+                     + " do not apply with --forecast-bench")
+        from benchmarks import forecast_bench
+        forecast_bench.main(args)
+        return
+    bench_only = dict(signal=args.signal != "ci",
+                      train_steps=args.train_steps
+                      != ap.get_default("train_steps"),
+                      refit_every=args.refit_every
+                      != ap.get_default("refit_every"),
+                      warmup=args.warmup is not None)
+    if any(bench_only.values()):
+        ap.error("--" + ", --".join(k.replace("_", "-")
+                                    for k, v in bench_only.items() if v)
+                 + " only apply with --forecast-bench")
     if args.sweep or args.plan:
         if args.only:
             ap.error("--only does not apply with --sweep "

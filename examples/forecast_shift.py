@@ -1,20 +1,26 @@
-"""Forecast-driven temporal shifting in ~30 lines.
+"""Forecast-driven temporal shifting in ~40 lines.
 
 Runs one delay-tolerant Borg-like cell through the reactive ``waterwise``
-controller, the Holt-Winters-driven ``waterwise-forecast`` planner, and the
-true-future ``waterwise-oracle`` upper bound — under nominal telemetry and
-under the ``forecast-error`` regime (the planner's forecast is +30% biased
-and 15% noisy while physics stay nominal). Prints the tidy table with the
-forecast-accuracy and deferral-latency columns, then the joint-cost summary:
+controller, the Holt-Winters-driven ``waterwise-forecast`` planner, the
+same planner on the *learned* RG-LRU forecaster
+(``waterwise-forecast[forecaster=learned]`` — it trains on the warm-start
+telemetry archive inside the pricer, then re-conditions on each hourly
+refit), and the true-future ``waterwise-oracle`` upper bound — under
+nominal telemetry and under the ``forecast-error`` regime (the planner's
+forecast is +30% biased and 15% noisy while physics stay nominal). Prints
+the tidy table with the forecast-accuracy and deferral-latency columns,
+then the joint-cost summary:
 
-  PYTHONPATH=src python examples/forecast_shift.py              # ~1 min
+  PYTHONPATH=src python examples/forecast_shift.py              # ~2 min
   PYTHONPATH=src python examples/forecast_shift.py --days 0.05  # CI smoke
 """
 import argparse
 
 from repro.sim import scenarios
 
-SCHEDULERS = ["waterwise", "waterwise-forecast", "waterwise-oracle"]
+SCHEDULERS = ["waterwise", "waterwise-forecast",
+              "waterwise-forecast[forecaster=learned]", "waterwise-oracle"]
+SCENARIOS = ["nominal", "forecast-error"]
 COLS = ("scenario", "scheduler", "jobs", "carbon_kg", "water_kl",
         "violation_pct", "forecast_mape", "mean_defer_s", "deferred_pct",
         "wall_s")
@@ -28,19 +34,18 @@ def main() -> None:
                          "temporal shifting needs slack to shift")
     args = ap.parse_args()
 
-    rows = scenarios.sweep(SCHEDULERS, ["nominal", "forecast-error"],
-                           days=args.days, seed=0,
+    rows = scenarios.sweep(SCHEDULERS, SCENARIOS, days=args.days, seed=0,
                            tolerance=args.tolerance)
     print(scenarios.to_table(rows, COLS))
     print()
-    for scen in ("nominal", "forecast-error"):
-        cells = {r["scheduler"]: r for r in rows if r["scenario"] == scen}
-        ww = cells["waterwise"]
-        for name in ("waterwise-forecast", "waterwise-oracle"):
-            r = cells[name]
+    for scen in SCENARIOS:
+        # Rows arrive scenario-major in SCHEDULERS order.
+        srows = [r for r in rows if r["scenario"] == scen]
+        ww = srows[0]
+        for spec, r in zip(SCHEDULERS[1:], srows[1:]):
             joint = 0.5 * (r["carbon_kg"] / ww["carbon_kg"]
                            + r["water_kl"] / ww["water_kl"])
-            print(f"{scen:>16} {name}: joint carbon+water cost "
+            print(f"{scen:>16} {spec}: joint carbon+water cost "
                   f"{100 * (1 - joint):+.2f}% vs reactive waterwise "
                   f"({r['deferred_pct']:.1f}% of jobs time-shifted, "
                   f"forecast MAPE {r['forecast_mape']:.1f}%)")

@@ -33,8 +33,9 @@ from repro.experiments.executor import (Executor, ProcessExecutor,
                                         describe_executors, executor_schema,
                                         get_executor, list_executors)
 from repro.experiments.plan import (CSV_COLS, TABLE_COLS, Cell,
-                                    ExperimentPlan, attach_savings, to_csv,
-                                    to_table)
+                                    ExperimentPlan, aggregate_seeds,
+                                    attach_savings, seed_group_key, t95,
+                                    to_csv, to_table)
 from repro.experiments.runner import CellError, run_cell
 from repro.experiments.scenario import (CELL_PARAMS, ScenarioSpec,
                                         as_scenario_spec, build_instance,
@@ -51,7 +52,7 @@ __all__ = [
     "describe_scenarios", "CELL_PARAMS",
     # plans
     "ExperimentPlan", "Cell", "attach_savings", "TABLE_COLS", "CSV_COLS",
-    "to_table", "to_csv",
+    "to_table", "to_csv", "aggregate_seeds", "seed_group_key", "t95",
     # running
     "run_cell", "CellError",
     # executors

@@ -22,6 +22,8 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import math
+import re
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 from repro import policy
@@ -172,6 +174,124 @@ def attach_savings(rows: Sequence[Dict], baseline: str = "baseline") -> None:
 
 
 # ---------------------------------------------------------------------------
+# Multi-seed confidence intervals
+# ---------------------------------------------------------------------------
+
+# Two-sided 95% Student-t critical values t_{0.975, df} for df = 1..30
+# (normal beyond) — hardcoded so the CI math has no scipy dependency and is
+# bit-deterministic across hosts.
+_T95 = {
+    1: 12.706204736432095, 2: 4.302652729911275, 3: 3.182446305284263,
+    4: 2.7764451051977987, 5: 2.570581835636197, 6: 2.4469118487916806,
+    7: 2.3646242510102993, 8: 2.306004135033371, 9: 2.2621571627409915,
+    10: 2.2281388519649385, 11: 2.200985160082949, 12: 2.1788128296634177,
+    13: 2.160368656461013, 14: 2.1447866879169273, 15: 2.131449545559323,
+    16: 2.1199052992210112, 17: 2.1098155778331806, 18: 2.100922040241039,
+    19: 2.093024054408263, 20: 2.0859634472658364, 21: 2.0796138447276626,
+    22: 2.0738730679040147, 23: 2.0686576104190406, 24: 2.0638985616280205,
+    25: 2.059538552753294, 26: 2.055529438642871, 27: 2.0518305164802833,
+    28: 2.048407141795244, 29: 2.0452296421327034, 30: 2.0422724563012373,
+}
+
+
+def t95(df: int) -> float:
+    """t_{0.975, df} (95% two-sided); normal approximation past df=30."""
+    return _T95.get(df, 1.959963984540054)
+
+
+def _strip_bracket_param(spec_str: str, key: str) -> str:
+    """Drop ``key=value`` from a bracketed spec string textually (no
+    registry lookup, so it works on rows from scenarios that are no longer
+    registered in this process)."""
+    m = re.match(r"^(.*)\[(.*)\]$", spec_str.strip())
+    if not m:
+        return spec_str
+    name, body = m.groups()
+    parts = [p.strip() for p in body.split(",")
+             if p.strip() and not p.strip().startswith(key + "=")]
+    return f"{name}[{','.join(parts)}]" if parts else name
+
+
+def seed_group_key(row: Dict) -> Tuple[str, str]:
+    """Identity of a row modulo its seed: the scenario spec with ``seed``
+    stripped × the policy spec with ``forecast_seed`` stripped (the one
+    param ``resolve_policy_spec`` varies per seed)."""
+    scen = str(row.get("scenario_spec") or row.get("scenario", ""))
+    spec = str(row.get("spec") or row.get("scheduler", ""))
+    return (_strip_bracket_param(scen, "seed"),
+            _strip_bracket_param(spec, "forecast_seed"))
+
+
+def aggregate_seeds(rows: Sequence[Dict]) -> List[Dict]:
+    """Collapse multi-seed replicate rows into one row per cell carrying
+    mean ± 95% CI (ROADMAP's rolling multi-seed studies item).
+
+    Rows that differ only in their seed (see :func:`seed_group_key`) are
+    grouped; every numeric metric becomes its across-seed mean under the
+    original key plus a ``<key>_ci95`` half-width (Student-t, two-sided
+    95%, sample std with ddof=1). Aggregated rows carry ``n_seeds`` and a
+    comma-joined ``seed`` column. Single rows pass through untouched; error
+    rows are never aggregated and ride along at the end.
+    """
+    groups: Dict[Tuple, List[Dict]] = {}
+    order: List[Tuple] = []
+    err_rows: List[Dict] = []
+    for r in rows:
+        if r.get("error"):
+            err_rows.append(r)
+            continue
+        k = seed_group_key(r)
+        if k not in groups:
+            groups[k] = []
+            order.append(k)
+        groups[k].append(r)
+    out: List[Dict] = []
+    for k in order:
+        g = groups[k]
+        if len(g) == 1:
+            out.append(g[0])
+            continue
+        agg = dict(g[0])
+        # The aggregated row describes the whole seed group: its spec
+        # columns are the seed-stripped forms (the group key), not the
+        # first replicate's seed-bearing specs.
+        scen_stripped, spec_stripped = k
+        if "scenario_spec" in agg:
+            agg["scenario_spec"] = scen_stripped
+        if "spec" in agg:
+            agg["spec"] = spec_stripped
+        agg["seed"] = ",".join(str(r.get("seed", "")) for r in g)
+        agg["n_seeds"] = len(g)
+        n = len(g)
+        crit = t95(n - 1)
+        for key in g[0]:
+            if key == "seed":          # identity, not a metric
+                continue
+            vals = [r.get(key) for r in g]
+            if not all(isinstance(v, (int, float))
+                       and not isinstance(v, bool) for v in vals):
+                continue
+            m = sum(vals) / n
+            var = sum((v - m) ** 2 for v in vals) / (n - 1)
+            agg[key] = float(m)
+            agg[f"{key}_ci95"] = float(crit * math.sqrt(var / n))
+        out.append(agg)
+    return out + err_rows
+
+
+def _has_seed_replicates(rows: Sequence[Dict]) -> bool:
+    seen: Dict[Tuple, set] = {}
+    for r in rows:
+        if r.get("error"):
+            continue
+        seeds = seen.setdefault(seed_group_key(r), set())
+        seeds.add(r.get("seed"))
+        if len(seeds) > 1:
+            return True
+    return False
+
+
+# ---------------------------------------------------------------------------
 # Tidy-row schema
 # ---------------------------------------------------------------------------
 
@@ -188,13 +308,28 @@ CSV_COLS = TABLE_COLS + ("stress_water_savings_pct", "p99_service_ratio",
                          "seed", "scenario_spec", "error", "spec")
 
 
-def to_table(rows: Sequence[Dict], cols: Sequence[str] = TABLE_COLS) -> str:
-    """Fixed-width tidy table (one line per experiment cell)."""
-    def fmt(v):
+def to_table(rows: Sequence[Dict], cols: Sequence[str] = TABLE_COLS, *,
+             ci: Union[bool, str] = "auto") -> str:
+    """Fixed-width tidy table (one line per experiment cell).
+
+    When the rows contain multi-seed replicates (a plan with ≥ 2 seeds)
+    they are collapsed through :func:`aggregate_seeds` and every numeric
+    cell renders as ``mean±ci95``. ``ci=False`` disables the aggregation,
+    ``ci=True`` forces it, the default ``"auto"`` detects replicates.
+    """
+    rows = list(rows)
+    if ci is True or (ci == "auto" and _has_seed_replicates(rows)):
+        rows = aggregate_seeds(rows)
+
+    def fmt(r, c):
+        v = r.get(c, "")
+        hw = r.get(f"{c}_ci95")
+        if hw is not None and isinstance(v, float):
+            return f"{v:.2f}±{hw:.2f}"
         if isinstance(v, float):
             return f"{v:.2f}"
         return str(v)
-    table = [[fmt(r.get(c, "")) for c in cols] for r in rows]
+    table = [[fmt(r, c) for c in cols] for r in rows]
     widths = [max(len(c), *(len(t[i]) for t in table)) if table else len(c)
               for i, c in enumerate(cols)]
     lines = ["  ".join(c.ljust(w) for c, w in zip(cols, widths))]

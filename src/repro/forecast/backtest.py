@@ -24,28 +24,52 @@ from repro.forecast import base
 
 
 def mape(y_true: np.ndarray, y_pred: np.ndarray) -> float:
-    """Mean absolute percentage error (%), guarded against zero truth."""
+    """Mean absolute percentage error (%), guarded against zero truth.
+
+    The denominator is floored at ``|t| = 1e-9``, so the result is always
+    finite: an exact prediction of a zero truth contributes 0, while a
+    nonzero prediction of a zero truth contributes a huge (but finite and
+    deterministic) term — a signal that percentage error is the wrong
+    metric for that series (use ``pinball_loss``/MAE on near-zero signals;
+    the telemetry signals this repo forecasts are strictly positive).
+    Accepts any matching shapes, including scalars and length-1 series.
+    """
     t = np.asarray(y_true, np.float64)
     p = np.asarray(y_pred, np.float64)
     return float(100.0 * np.mean(np.abs(p - t) / np.maximum(np.abs(t), 1e-9)))
 
 
 def pinball_loss(y_true: np.ndarray, y_pred: np.ndarray, q: float) -> float:
-    """Quantile (pinball) loss for quantile level ``q``."""
+    """Quantile (pinball) loss for quantile level ``q``.
+
+    At ``q = 0.5`` this is exactly half the mean absolute error (pinned by
+    a property test), which is why the q50 head of a quantile forecaster is
+    also its point forecast. Defined for any matching shapes, length-1 and
+    all-zero series included (no division anywhere).
+    """
     d = np.asarray(y_true, np.float64) - np.asarray(y_pred, np.float64)
     return float(np.mean(np.maximum(q * d, (q - 1.0) * d)))
 
 
 def backtest(series: np.ndarray, make: Callable[[], base.Forecaster], *,
-             horizon: int = 6, warmup: int = 30, stride: int = 1) -> Dict:
-    """Expanding-window backtest of ``make()`` forecasters over ``series``.
+             horizon: int = 6, warmup: int = 30, stride: int = 1,
+             refit_every: int = 1) -> Dict:
+    """Expanding-window backtest of a ``make()`` forecaster over ``series``.
+
+    One forecaster instance walks forward through the origins: it is fully
+    re-``fit`` at the first origin and every ``refit_every``-th origin after
+    that, and cheaply ``update``-d (re-conditioned on the grown history) in
+    between. For the stateless classical models ``update`` *is* ``fit``, so
+    ``refit_every`` only matters for models with a real training cost (the
+    learned forecaster trains on refits and re-conditions on updates).
 
     Args:
       series: [T, C] hourly truth.
-      make: zero-arg factory returning a fresh forecaster per origin.
+      make: zero-arg factory returning the forecaster to walk forward.
       horizon: lead hours scored per origin.
       warmup: first origin (minimum history length).
       stride: hours between consecutive origins.
+      refit_every: full-refit cadence in origins (1 = refit every origin).
 
     Returns a dict with overall ``mape``, per-lead ``mape_by_lead`` [horizon],
     ``pinball`` (mean of both tails), ``coverage`` in [0, 1], and
@@ -57,8 +81,13 @@ def backtest(series: np.ndarray, make: Callable[[], base.Forecaster], *,
     abs_pct = []        # [n, horizon] per-origin per-lead APE means
     pin, cover = [], []
     n = 0
-    for t in origins:
-        fc = make().fit(y[:t]).predict(horizon)
+    f = make()
+    for i, t in enumerate(origins):
+        if refit_every <= 1 or i % refit_every == 0:
+            f.fit(y[:t])
+        else:
+            f.update(y[:t])
+        fc = f.predict(horizon)
         truth = y[t:t + horizon]
         ape = np.abs(fc.mean - truth) / np.maximum(np.abs(truth), 1e-9)
         abs_pct.append(100.0 * ape.mean(axis=1))
@@ -77,11 +106,14 @@ def backtest(series: np.ndarray, make: Callable[[], base.Forecaster], *,
 
 def backtest_telemetry(tele: telemetry.Telemetry, key: str, name: str, *,
                        horizon: int = 6, warmup: int = 30, stride: int = 1,
-                       **model_kw) -> Dict:
+                       refit_every: int = 1, **model_kw) -> Dict:
     """Backtest a named forecaster on one telemetry signal.
 
     ``key`` ∈ {"ci", "ewif", "wue", "water_intensity"}; ``name`` is a
-    registered model name or ``"oracle"``.
+    registered model name or ``"oracle"``; ``refit_every`` sets the
+    walk-forward full-refit cadence (see :func:`backtest`); ``model_kw``
+    are constructor overrides for the named model (e.g. ``train_steps``
+    for ``learned``).
     """
     series = getattr(tele, key)
     if name == "oracle":
@@ -89,4 +121,4 @@ def backtest_telemetry(tele: telemetry.Telemetry, key: str, name: str, *,
     else:
         make = lambda: base.make_forecaster(name, **model_kw)
     return backtest(series, make, horizon=horizon, warmup=warmup,
-                    stride=stride)
+                    stride=stride, refit_every=refit_every)

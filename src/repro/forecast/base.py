@@ -15,9 +15,11 @@ reproducible cell-for-cell.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple, Type
+from typing import Dict, List, Optional, Tuple, Type
 
 import numpy as np
+
+from repro import spec as _spec
 
 HOUR = 3600.0
 
@@ -104,9 +106,17 @@ class Forecaster:
     """``fit(history) -> self`` then ``predict(horizon) -> Forecast``."""
 
     name = "base"
+    description = ""
 
     def fit(self, history: np.ndarray) -> "Forecaster":
         raise NotImplementedError
+
+    def update(self, history: np.ndarray) -> "Forecaster":
+        """Walk-forward refresh between full refits. For the stateless
+        classical models this *is* a full refit (their ``fit`` is cheap);
+        stateful models (the learned forecaster) override it to re-condition
+        on the new history without retraining."""
+        return self.fit(history)
 
     def predict(self, horizon: int) -> Forecast:
         raise NotImplementedError
@@ -127,6 +137,8 @@ class Persistence(Forecaster):
     """Tomorrow looks exactly like right now (the naive / random-walk model)."""
 
     name = "persistence"
+    description = ("random-walk baseline: every lead repeats the last "
+                   "observation")
 
     def fit(self, history: np.ndarray) -> "Persistence":
         y = np.asarray(history, np.float64)
@@ -152,6 +164,8 @@ class SeasonalNaive(Forecaster):
     """
 
     name = "seasonal-naive"
+    description = ("period-24 baseline: tomorrow's hour h repeats today's "
+                   "hour h (persistence fallback below one period)")
 
     def __init__(self, period: int = 24):
         self.period = period
@@ -249,16 +263,59 @@ def register_model(cls: Type[Forecaster]) -> Type[Forecaster]:
     return cls
 
 
+def _ensure_models() -> None:
+    # The HoltWinters / learned registrations are import side effects of
+    # their modules; importing the package pulls them in. Guard for callers
+    # that imported ``repro.forecast.base`` directly.
+    if "holtwinters" not in _MODELS or "learned" not in _MODELS:
+        import repro.forecast  # noqa: F401
+
+
 def make_forecaster(name: str, **kw) -> Forecaster:
     """Instantiate a history-driven forecaster by name.
 
+    Unknown names raise the shared did-you-mean ``UnknownNameError`` (a
+    ``KeyError`` subclass, matching the policy/scenario registries).
     ``oracle`` is not constructible here — it needs ground truth, which only
     the caller (controller / backtest harness) holds.
     """
+    _ensure_models()
     if name not in _MODELS:
-        raise KeyError(f"unknown forecaster {name!r}; have {sorted(_MODELS)}")
+        raise _spec.unknown_name_error("forecaster", name, sorted(_MODELS))
     return _MODELS[name](**kw)
 
 
 def list_forecasters() -> list:
+    _ensure_models()
     return sorted(_MODELS)
+
+
+def forecaster_schema(name: str) -> Dict[str, _spec.Param]:
+    """Typed constructor-parameter schema of a registered forecaster,
+    introspected from its ``__init__`` signature (the same derivation the
+    policy registry uses, so documented defaults can never drift)."""
+    _ensure_models()
+    if name not in _MODELS:
+        raise _spec.unknown_name_error("forecaster", name, sorted(_MODELS))
+    return {p.name: p for p in _spec.params_from_signature(_MODELS[name])}
+
+
+def describe_forecasters(markdown: bool = False) -> str:
+    """Human-readable registry dump (the ``--list-forecasters`` surface and
+    the source of the README forecaster table)."""
+    entries: List[Type[Forecaster]] = [_MODELS[n]
+                                       for n in list_forecasters()]
+    if markdown:
+        lines = ["| forecaster | parameters | description |", "|---|---|---|"]
+        for cls in entries:
+            ps = ", ".join(f"`{p.describe()}`"
+                           for p in forecaster_schema(cls.name).values()) \
+                or "—"
+            lines.append(f"| `{cls.name}` | {ps} | {cls.description} |")
+        return "\n".join(lines)
+    lines = []
+    for cls in entries:
+        lines.append(f"{cls.name:16s} {cls.description}")
+        for p in forecaster_schema(cls.name).values():
+            lines.append(f"    {p.describe()}")
+    return "\n".join(lines)

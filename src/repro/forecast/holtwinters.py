@@ -115,6 +115,9 @@ class HoltWinters(base.Forecaster):
     """Damped-trend seasonal Holt–Winters with grid-selected smoothing."""
 
     name = "holtwinters"
+    description = ("damped-trend seasonal ETS(A,Ad,A) filter on "
+                   "jax.lax.scan, grid-selected smoothing, jitted once "
+                   "per padded history shape")
 
     def __init__(self, period: int = 24):
         self.period = period

@@ -30,7 +30,7 @@ _HELP: Dict[str, str] = {
     "defer_slack_s": "min remaining TOL budget (s) to offer the defer arc",
     "record_windows": "record every solved window for offline batched replay",
     "forecaster": "forecast model (holtwinters / seasonal-naive / "
-                  "persistence / oracle)",
+                  "persistence / learned / oracle)",
     "horizon_slots": "number of future slots offered per round",
     "slot_s": "slot width (seconds)",
     "risk": "shade future slots toward the upper quantile band by this "

@@ -241,6 +241,8 @@ class ForecastPricer(Pricer):
                  guard_s: float = 240.0, warmup_hours: int = 96,
                  forecast_bias: float = 1.0, forecast_noise: float = 0.0,
                  forecast_seed: int = 0):
+        # ``forecaster`` names any registered model ("holtwinters",
+        # "seasonal-naive", "persistence", "learned", ...) or "oracle".
         from repro import forecast as fcast
         self._fcast = fcast
         self.forecaster_name = forecaster
@@ -263,6 +265,12 @@ class ForecastPricer(Pricer):
         self._fit_hour = -1
         self._forecast = None
         self._fitted = None
+        # The forecaster object is created once and re-fit every refresh:
+        # classical models reset fully on fit() (bit-identical to a fresh
+        # instance), while stateful models (the learned forecaster) keep
+        # their trained parameters across refits and decide internally when
+        # to retrain (``retrain_every``) vs. just re-condition.
+        self._forecaster_obj = None
         # Online forecast-accuracy bookkeeping (the sweep's accuracy column):
         # each refit scores the previous forecast against the hours that have
         # since realized.
@@ -316,7 +324,9 @@ class ForecastPricer(Pricer):
         else:
             idx = np.arange(h - self.warmup_hours + 1, h + 1) % T
             hist = self._truth[idx]
-        self._fitted = self._make_forecaster().fit(hist)
+        if self._forecaster_obj is None:
+            self._forecaster_obj = self._make_forecaster()
+        self._fitted = self._forecaster_obj.fit(hist)
         self._fit_hour = h
         horizon_h = int(np.ceil(self.horizon_slots * self.slot_s
                                 / telemetry.HOUR)) + 1

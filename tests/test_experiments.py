@@ -413,3 +413,87 @@ def test_savings_group_by_scenario_spec_not_name():
 def test_split_specs_reexported_for_scenario_lists():
     assert split_specs("a[x=1,y=2], b ,c[z=3]") == \
         ["a[x=1,y=2]", "b", "c[z=3]"]
+
+
+# ---------------------------------------------------------------------------
+# Multi-seed confidence intervals (ROADMAP: rolling multi-seed studies)
+# ---------------------------------------------------------------------------
+
+def test_aggregate_seeds_ci_math_pinned():
+    """CI math on a fixed 3-seed cell: mean ± t_{0.975,2}·s/√3 with the
+    sample std (ddof=1), exactly."""
+    rows = [dict(scenario="nominal", scheduler="baseline", spec="baseline",
+                 scenario_spec=f"nominal[days=0.2,seed={s}]", seed=s,
+                 error="", carbon_kg=v, jobs=100)
+            for s, v in zip((0, 1, 2), (10.0, 12.0, 14.0))]
+    agg = experiments.aggregate_seeds(rows)
+    assert len(agg) == 1
+    a = agg[0]
+    assert a["n_seeds"] == 3 and a["seed"] == "0,1,2"
+    # The aggregated row's spec columns are the seed-stripped group
+    # identity, not the first replicate's seed-bearing spec.
+    assert a["scenario_spec"] == "nominal[days=0.2]"
+    assert a["carbon_kg"] == pytest.approx(12.0)
+    # sample std of (10, 12, 14) is 2.0; t_{0.975, df=2} = 4.302652729911275
+    assert a["carbon_kg_ci95"] == pytest.approx(
+        4.302652729911275 * 2.0 / np.sqrt(3.0), rel=1e-12)
+    assert experiments.t95(2) == pytest.approx(4.302652729911275)
+    assert experiments.t95(1000) == pytest.approx(1.959963984540054)
+    # Zero-variance metrics aggregate to ±0.00.
+    assert a["jobs"] == pytest.approx(100.0)
+    assert a["jobs_ci95"] == pytest.approx(0.0)
+
+
+def test_to_table_emits_ci_columns_for_multi_seed_rows():
+    rows = [dict(scenario="nominal", scheduler="baseline", spec="baseline",
+                 scenario_spec=f"nominal[days=0.2,seed={s}]", seed=s,
+                 error="", carbon_kg=v)
+            for s, v in zip((0, 1, 2), (10.0, 12.0, 14.0))]
+    table = experiments.to_table(rows, ("scenario", "scheduler",
+                                        "carbon_kg"))
+    assert "12.00±4.97" in table
+    assert table.count("baseline") == 1          # collapsed to one line
+    # Single-seed rows render unchanged, and ci=False disables aggregation.
+    assert "±" not in experiments.to_table(rows[:1],
+                                           ("scenario", "carbon_kg"))
+    assert "±" not in experiments.to_table(rows, ("scenario", "carbon_kg"),
+                                           ci=False)
+
+
+def test_seed_group_key_strips_seed_and_forecast_seed():
+    a = dict(scenario_spec="nominal[days=0.2,seed=0]",
+             spec="waterwise-forecast[forecast_bias=1.3,forecast_seed=0]")
+    b = dict(scenario_spec="nominal[days=0.2,seed=1]",
+             spec="waterwise-forecast[forecast_bias=1.3,forecast_seed=1]")
+    assert experiments.seed_group_key(a) == experiments.seed_group_key(b)
+    c = dict(scenario_spec="nominal[days=0.5,seed=1]", spec="waterwise")
+    assert experiments.seed_group_key(a) != experiments.seed_group_key(c)
+
+
+def test_multi_seed_plan_end_to_end_ci():
+    """A real 3-seed plan: one aggregated row per cell, CI columns on the
+    metrics, error-free."""
+    plan = experiments.ExperimentPlan.build(
+        scenarios=["nominal[days=0.02]"], policies=["baseline"],
+        seeds=[0, 1, 2])
+    rows = plan.run(executor="serial")
+    assert len(rows) == 3
+    assert sorted(r["seed"] for r in rows) == [0, 1, 2]
+    agg = experiments.aggregate_seeds(rows)
+    assert len(agg) == 1
+    assert agg[0]["n_seeds"] == 3
+    assert agg[0]["carbon_kg_ci95"] >= 0.0
+    assert "±" in experiments.to_table(rows)
+
+
+def test_aggregate_seeds_keeps_error_rows_unaggregated():
+    ok = [dict(scenario="nominal", scheduler="baseline", spec="baseline",
+               scenario_spec=f"nominal[seed={s}]", seed=s, error="",
+               carbon_kg=1.0 * s) for s in (0, 1)]
+    bad = dict(scenario="nominal", scheduler="waterwise", spec="waterwise",
+               scenario_spec="nominal[seed=0]", seed=0,
+               error="RuntimeError: boom")
+    agg = experiments.aggregate_seeds(ok + [bad])
+    assert len(agg) == 2
+    assert agg[0]["n_seeds"] == 2
+    assert agg[1]["error"].startswith("RuntimeError")

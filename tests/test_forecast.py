@@ -1,8 +1,12 @@
-"""Forecasting subsystem: models, backtesting, quantile bands, jit caching."""
+"""Forecasting subsystem: models, backtesting, quantile bands, jit caching,
+the learned RG-LRU forecaster, and the registry surface."""
+import os
+import tempfile
 import time
 
 import numpy as np
 import pytest
+from hypothesis import given, settings, strategies as st
 
 from repro import forecast
 from repro.core import telemetry
@@ -125,6 +129,190 @@ def test_backtest_rejects_too_short_series(tele):
 
 def test_make_forecaster_registry():
     names = forecast.list_forecasters()
-    assert {"persistence", "seasonal-naive", "holtwinters"} <= set(names)
+    assert {"persistence", "seasonal-naive", "holtwinters",
+            "learned"} <= set(names)
     with pytest.raises(KeyError):
         forecast.make_forecaster("no-such-model")
+
+
+# ---------------------------------------------------------------------------
+# Registry surface: did-you-mean parity + default-construction round trip
+# ---------------------------------------------------------------------------
+
+def test_make_forecaster_did_you_mean_parity():
+    """Unknown forecaster names raise the same UnknownNameError surface as
+    the policy/scenario registries: KeyError subclass, did-you-mean hint,
+    full name list."""
+    from repro.spec import UnknownNameError
+    with pytest.raises(KeyError) as ei:
+        forecast.make_forecaster("hotwinters")
+    assert isinstance(ei.value, UnknownNameError)
+    msg = str(ei.value)
+    assert "did you mean 'holtwinters'" in msg
+    assert "seasonal-naive" in msg          # the full list rides along
+
+
+def test_every_registered_forecaster_round_trips(tele):
+    """Every list_forecasters() entry constructs with defaults and
+    satisfies the Forecaster interface on a tiny series (the learned model
+    falls back to seasonal-naive below its training threshold — still a
+    valid Forecast)."""
+    for name in forecast.list_forecasters():
+        f = forecast.make_forecaster(name)
+        assert isinstance(f, forecast.Forecaster)
+        fc = f.fit(tele.ci[:60]).predict(4)
+        assert isinstance(fc, forecast.Forecast)
+        assert fc.mean.shape == (4, 5)
+        assert (fc.lo <= fc.mean + 1e-12).all()
+        assert (fc.mean <= fc.hi + 1e-12).all()
+        np.testing.assert_allclose(fc.anchor, tele.ci[59])
+        # update() is part of the shared interface (walk-forward refresh).
+        fc2 = f.update(tele.ci[:61]).predict(4)
+        assert fc2.mean.shape == (4, 5)
+
+
+def test_describe_forecasters_schema():
+    md = forecast.describe_forecasters(markdown=True)
+    for name in forecast.list_forecasters():
+        assert f"| `{name}` |" in md
+    assert "`period=24:int`" in md
+    schema = forecast.forecaster_schema("learned")
+    assert schema["train_steps"].type is int
+    assert schema["lr"].type is float
+    with pytest.raises(KeyError):
+        forecast.forecaster_schema("nope")
+
+
+# ---------------------------------------------------------------------------
+# Backtest metric edge cases
+# ---------------------------------------------------------------------------
+
+def test_mape_edge_cases():
+    const = np.full((5, 2), 3.0)
+    assert forecast.mape(const, const) == 0.0
+    zeros = np.zeros((4, 1))
+    # Exact zero prediction of a zero truth contributes nothing...
+    assert forecast.mape(zeros, zeros) == 0.0
+    # ...while a nonzero prediction of zero truth is huge but finite (the
+    # documented 1e-9 denominator guard), never a ZeroDivision/inf/nan.
+    big = forecast.mape(zeros, np.full((4, 1), 1e-3))
+    assert np.isfinite(big) and big > 1e6
+    # Length-1 series work elementwise.
+    assert forecast.mape(np.array([2.0]), np.array([1.0])) == \
+        pytest.approx(50.0)
+
+
+def test_pinball_edge_cases():
+    zeros = np.zeros(4)
+    assert forecast.pinball_loss(zeros, zeros, 0.1) == 0.0
+    const = np.full(6, 2.5)
+    assert forecast.pinball_loss(const, const, 0.9) == 0.0
+    # Length-1: under-prediction at q charges q·d, over charges (1−q)·|d|.
+    assert forecast.pinball_loss(np.array([1.0]), np.array([0.0]), 0.9) == \
+        pytest.approx(0.9)
+    assert forecast.pinball_loss(np.array([0.0]), np.array([1.0]), 0.9) == \
+        pytest.approx(0.1)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.tuples(st.floats(-1e6, 1e6), st.floats(-1e6, 1e6)),
+                min_size=1, max_size=30))
+def test_pinball_at_median_is_half_mae(pairs):
+    y = np.array([p[0] for p in pairs])
+    p = np.array([p[1] for p in pairs])
+    assert forecast.pinball_loss(y, p, 0.5) == \
+        pytest.approx(0.5 * np.mean(np.abs(y - p)), rel=1e-12, abs=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Learned forecaster (RG-LRU head)
+# ---------------------------------------------------------------------------
+
+def test_learned_beats_seasonal_naive_walk_forward():
+    """Acceptance: the learned forecaster, trained once on 7 days of
+    synthetic diurnal carbon intensity, beats seasonal-naive on the
+    held-out tail under the walk-forward protocol (fixed seed, fully
+    deterministic)."""
+    tele10 = telemetry.generate(days=10, seed=0)
+    kw = dict(horizon=6, warmup=168, stride=6)
+    s = forecast.backtest_telemetry(tele10, "ci", "seasonal-naive", **kw)
+    l = forecast.backtest_telemetry(tele10, "ci", "learned", seed=0,
+                                    refit_every=999, **kw)
+    assert l["mape"] < s["mape"], (l["mape"], s["mape"])
+    assert l["n_origins"] == s["n_origins"] > 5
+
+
+def test_learned_interface_and_periodic_extension(tele):
+    f = forecast.make_forecaster("learned", train_steps=30, seed=0)
+    f.fit(tele.ci[:96])
+    assert f.train_count == 1
+    fc = f.predict(8)
+    assert fc.mean.shape == (8, 5)
+    assert (fc.lo <= fc.mean + 1e-12).all()
+    assert (fc.mean <= fc.hi + 1e-12).all()
+    np.testing.assert_allclose(fc.anchor, tele.ci[95])
+    # Horizons past the trained 24 extend periodically from the tail.
+    fc2 = f.predict(40)
+    assert fc2.mean.shape == (40, 5)
+    np.testing.assert_allclose(fc2.mean[24:40], fc2.mean[0:16])
+
+
+def test_learned_fallback_and_refit_policy(tele):
+    # Histories below the training threshold degrade to seasonal-naive.
+    tiny = forecast.make_forecaster("learned").fit(tele.ci[:30])
+    assert tiny.predict(4).mean.shape == (4, 5)
+    assert tiny.train_count == 0
+    # update() never retrains; fit() retrains on the retrain_every cadence.
+    f = forecast.make_forecaster("learned", train_steps=10, retrain_every=2,
+                                 seed=0)
+    f.fit(tele.ci[:96])
+    assert f.train_count == 1
+    f.update(tele.ci[:100])
+    f.update(tele.ci[:104])
+    assert f.train_count == 1
+    f.fit(tele.ci[:100])
+    f.fit(tele.ci[:104])            # 2nd fit since training → retrain
+    assert f.train_count == 2
+
+
+def test_learned_checkpoint_roundtrip(tele):
+    f = forecast.make_forecaster("learned", train_steps=25, seed=3)
+    f.fit(tele.ci[:96])
+    with tempfile.TemporaryDirectory() as d:
+        path = f.save(d, step=7)
+        assert os.path.exists(os.path.join(path, "state.npz"))
+        g = forecast.LearnedForecaster.load(d)
+        assert g.train_count == 0           # restored, not retrained
+        f.update(tele.ci[:100])
+        g.update(tele.ci[:100])
+        np.testing.assert_allclose(g.predict(6).mean, f.predict(6).mean,
+                                   rtol=1e-6)
+        # The checkpoint= constructor param (the make_forecaster path).
+        h = forecast.make_forecaster("learned", checkpoint=d)
+        h.update(tele.ci[:100])
+        np.testing.assert_allclose(h.predict(6).mean, f.predict(6).mean,
+                                   rtol=1e-6)
+    unfit = forecast.make_forecaster("learned")
+    with pytest.raises(ValueError):
+        unfit.save("/tmp/never-written")
+
+
+def test_learned_pallas_inference_matches_assoc(tele):
+    """The scan_impl="pallas" inference path (the repro.kernels.rglru_scan
+    kernel, interpret mode on CPU) agrees with the associative scan."""
+    fa = forecast.make_forecaster("learned", train_steps=5, seed=0)
+    fp = forecast.make_forecaster("learned", train_steps=5, seed=0,
+                                  scan_impl="pallas")
+    fa.fit(tele.ci[:96])
+    fp.fit(tele.ci[:96])
+    np.testing.assert_allclose(fp.predict(6).mean, fa.predict(6).mean,
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_backtest_refit_every_updates_between_refits(tele):
+    """The walk-forward harness fully refits on the cadence and updates in
+    between — for the learned model that means exactly one training run."""
+    r = forecast.backtest_telemetry(tele, "ci", "learned", horizon=6,
+                                    warmup=96, stride=6, refit_every=999,
+                                    train_steps=5, seed=0)
+    assert r["n_origins"] > 3          # walked multiple origins, one train

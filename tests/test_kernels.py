@@ -98,6 +98,25 @@ def test_rglru_scan_sweep(S, W, chunk):
     np.testing.assert_allclose(np.asarray(yk), np.asarray(yr), atol=1e-4)
 
 
+@pytest.mark.parametrize("B,S,W", [
+    (15, 48, 16),     # the learned forecaster's shape: batch = stacked
+                      # signal×region columns, window-length sequences
+    (5, 29, 16),      # batch = regions, odd non-padded length
+    (2, 7, 15),       # short odd sequence, odd (non-lane-aligned) width
+])
+def test_rglru_scan_forecast_shapes(B, S, W):
+    """Forecast-shaped inputs through the kernel entry (default chunk, so
+    odd lengths hit the L=S single-chunk path with no padding) — pins the
+    learned forecaster's pallas inference path independently of the model
+    tests."""
+    rng = np.random.default_rng(6)
+    a = jnp.asarray(rng.random((B, S, W)) * 0.95, jnp.float32)
+    bx = jnp.asarray(rng.standard_normal((B, S, W)), jnp.float32)
+    yk = rglru_scan(a, bx, interpret=True)
+    yr = rglru_ref(a, bx)
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(yr), atol=1e-4)
+
+
 def test_rglru_model_assoc_scan_matches_naive():
     """models/rglru associative scan == sequential recurrence."""
     import repro.models.rglru as rg
