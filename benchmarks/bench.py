@@ -1,0 +1,384 @@
+"""Persisted perf harness for the fused scheduling round (BENCH_6.json).
+
+  PYTHONPATH=src python -m benchmarks.bench                  # print only
+  PYTHONPATH=src python -m benchmarks.bench --out BENCH_6.json
+  PYTHONPATH=src python -m benchmarks.bench --check BENCH_6.json \\
+      --tolerance 0.10                                       # CI gate
+
+Three sections, one JSON document (``schema_version`` pins the layout; see
+benchmarks/README.md for the field-by-field schema):
+
+  solver      per-bucket temporal-round wall (unfused planner + jax solve
+              vs the single fused program) and solver-level jobs/sec
+  e2e         end-to-end jobs/sec on the standard diurnal cell
+              (waterwise-forecast oracle pipeline, jax vs fused backend)
+  forecaster  learned-forecaster fit/infer wall + jit retrace counts
+              (repro.forecast.learned.cache_stats)
+
+The CI gate compares only *machine-relative ratio* metrics (the fused
+speedups) and correctness flags against the committed baseline — absolute
+wall-clock differs across runner generations, but "fused beats unfused by
+roughly this much on the same machine" is portable. ``--check`` fails when
+any gated ratio drops more than ``--tolerance`` below the baseline, or when
+parity (``records_equal`` / ``assign_equal``) regresses.
+"""
+from __future__ import annotations
+
+import argparse
+import copy
+import json
+import sys
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+SCHEMA_VERSION = 1
+
+#: Ratio metrics the CI gate enforces (dotted paths into the document).
+#: Absolute walls are recorded for humans but never gated.
+GATED_RATIOS = (
+    "e2e.fused_speedup",
+    "solver.buckets.*.fused_speedup",
+)
+
+#: Correctness flags that must stay True.
+GATED_FLAGS = (
+    "e2e.records_equal",
+    "solver.buckets.*.assign_equal",
+)
+
+
+def _timeit(fn: Callable, reps: int) -> float:
+    """Median-free mean wall seconds per call after one warm call."""
+    fn()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps
+
+
+# ---------------------------------------------------------------------------
+# solver section: fused program vs unfused planner+solver, per bucket
+# ---------------------------------------------------------------------------
+
+def bench_solver(sizes: Tuple[int, ...] = (4, 16, 64, 256),
+                 reps: int = 10, seed: int = 0) -> Dict:
+    import numpy as np
+    from repro.core import telemetry, problem, footprint, solvers
+    from repro.core.round import fused_temporal_round
+    from repro.forecast import build_temporal_plan
+
+    tele = telemetry.generate(days=2, seed=0)
+    server = footprint.m5_metal()
+    S, R = 8, 5
+    offsets = np.arange(S) * 1800.0
+    rng = np.random.default_rng(seed)
+    snap = tele.at(0.0)
+    buckets: Dict[str, Dict] = {}
+    for M in sizes:
+        jobs = [problem.Job(job_id=i, home_region=i % R, submit_time_s=0.0,
+                            exec_time_s=600.0 + 10 * i, energy_kwh=0.05,
+                            tolerance=4.0) for i in range(M)]
+        cap = np.full(R, max(2, M // R + 1))
+        inst = problem.build(jobs, tele, 0.0, cap, server, snap=snap)
+        ci = rng.random((M, S, R)) * 300 + 50
+        ewif = rng.random((M, S, R)) * 2 + 0.5
+        wue = rng.random((M, S, R)) * 1 + 0.2
+
+        def unfused():
+            plan = build_temporal_plan(inst, 0.0, ci, ewif, wue,
+                                       snap["pue"], snap["wsf"], offsets,
+                                       server, 0.5, 0.5)
+            return solvers.solve(plan.cost, plan.allowed, plan.capacity,
+                                 backend="jax")
+
+        def fused():
+            return fused_temporal_round(inst, 0.0, ci, ewif, wue,
+                                        snap["pue"], snap["wsf"], offsets,
+                                        server, 0.5, 0.5)[3]
+
+        unfused(), fused()                  # warm compile caches
+        tu = tf = 0.0                       # interleave: shared noise floor
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            unfused()
+            tu += time.perf_counter() - t0
+            t0 = time.perf_counter()
+            fused()
+            tf += time.perf_counter() - t0
+        tu /= reps
+        tf /= reps
+        eq = bool((unfused().assign == fused().assign).all())
+        buckets[str(M)] = dict(
+            jobs=M, unfused_ms=tu * 1e3, fused_ms=tf * 1e3,
+            unfused_jobs_per_s=M / tu, fused_jobs_per_s=M / tf,
+            fused_speedup=tu / tf, assign_equal=eq)
+    return dict(slots=S, regions=R, reps=reps, buckets=buckets)
+
+
+# ---------------------------------------------------------------------------
+# e2e section: the standard diurnal cell through the event engine
+# ---------------------------------------------------------------------------
+
+def bench_e2e(days: float = 0.05, seed: int = 3, reps: int = 3) -> Dict:
+    from repro.core import telemetry
+    from repro.policy.pipeline import forecast_pipeline
+    from repro.sim.engine import EventSimulator, SimConfig
+    from repro.sim.trace import borg_trace, scale_capacity_for_utilization
+
+    tele = telemetry.generate(days=2, seed=0)
+    jobs = borg_trace(days=days, seed=seed, tolerance=4.0,
+                      target_jobs_per_day=23000.0)
+    cap = scale_capacity_for_utilization(jobs, days, tele.num_regions, 0.15)
+
+    def run(backend: str):
+        ctl = forecast_pipeline(tele, forecaster="oracle", risk=0.0,
+                                defer_eps=1e-4, backend=backend)
+        t0 = time.perf_counter()
+        res = EventSimulator(tele, cap, SimConfig()).run(
+            copy.deepcopy(jobs), ctl)
+        return res, time.perf_counter() - t0
+
+    run("jax")                              # warm both compile caches
+    run("fused")
+    # Engine runs are ~1s and noisy; alternate backends and take the best
+    # wall per backend so the gated speedup is a stable machine-relative
+    # ratio, not a race between two single samples.
+    w_jax = w_fused = float("inf")
+    r_jax = r_fused = None
+    for _ in range(reps):
+        r, w = run("jax")
+        if w < w_jax:
+            r_jax, w_jax = r, w
+        r, w = run("fused")
+        if w < w_fused:
+            r_fused, w_fused = r, w
+
+    def key(r):
+        return (r.job.job_id, r.region, r.start_s, r.finish_s,
+                r.carbon_g, r.water_l)
+
+    eq = ([key(r) for r in r_jax["records"]]
+          == [key(r) for r in r_fused["records"]])
+    return dict(cell="diurnal[borg]", days=days, seed=seed,
+                jobs=len(jobs), unfinished=r_fused["unfinished"],
+                jax_wall_s=w_jax, fused_wall_s=w_fused,
+                jax_jobs_per_s=len(jobs) / w_jax,
+                fused_jobs_per_s=len(jobs) / w_fused,
+                fused_speedup=w_jax / w_fused, records_equal=bool(eq))
+
+
+# ---------------------------------------------------------------------------
+# forecaster section: fit / infer wall + retrace accounting
+# ---------------------------------------------------------------------------
+
+def bench_forecaster(train_steps: int = 60, infer_reps: int = 20,
+                     seed: int = 0) -> Dict:
+    from repro import forecast
+    from repro.core import telemetry
+    from repro.forecast import learned
+
+    tele = telemetry.generate(days=5, seed=0)
+    before = learned.cache_stats()
+    f = forecast.make_forecaster("learned", train_steps=train_steps,
+                                 seed=seed)
+    t0 = time.perf_counter()
+    f.fit(tele.ci[:96])
+    fit_wall = time.perf_counter() - t0
+    # The jitted inference runs when the forecaster (re-)conditions on a
+    # history tail (update); predict() then just slices the conditioned
+    # horizon. Time the real path: re-condition + read one horizon.
+    hist = tele.ci[:100]
+    infer_wall = _timeit(lambda: (f.update(hist), f.predict(8)), infer_reps)
+    after = learned.cache_stats()
+    return dict(train_steps=train_steps, fit_wall_s=fit_wall,
+                infer_wall_s=infer_wall,
+                train_retraces=(after["train_step"]["builds"]
+                                - before["train_step"]["builds"]),
+                predict_retraces=(after["predict_fn"]["builds"]
+                                  - before["predict_fn"]["builds"]),
+                cache_stats=after)
+
+
+# ---------------------------------------------------------------------------
+# document assembly / gate
+# ---------------------------------------------------------------------------
+
+def run_bench(quick: bool = False) -> Dict:
+    import jax
+
+    dev = jax.devices()[0]
+    sizes = (4, 16, 64) if quick else (4, 16, 64, 256)
+    doc = dict(
+        schema_version=SCHEMA_VERSION,
+        bench="round-fusion",
+        env=dict(platform=sys.platform, device=dev.platform,
+                 jax=jax.__version__,
+                 python=".".join(map(str, sys.version_info[:3]))),
+        solver=bench_solver(sizes=sizes, reps=4 if quick else 10),
+        e2e=bench_e2e(days=0.03 if quick else 0.05, reps=2 if quick else 3),
+        forecaster=bench_forecaster(train_steps=30 if quick else 60),
+    )
+    return doc
+
+
+def _lookup(doc: Dict, path: str) -> List[Tuple[str, object]]:
+    """Resolve a dotted path; ``*`` fans out over dict keys present in
+    BOTH documents' parent node (handled by the caller intersecting)."""
+    nodes = [("", doc)]
+    for part in path.split("."):
+        nxt = []
+        for prefix, node in nodes:
+            if part == "*":
+                for k, v in sorted(node.items()):
+                    nxt.append((f"{prefix}{k}.", v))
+            elif isinstance(node, dict) and part in node:
+                nxt.append((f"{prefix}{part}.", node[part]))
+        nodes = nxt
+    return [(p.rstrip("."), v) for p, v in nodes]
+
+
+def check(current: Dict, baseline: Dict, tolerance: float = 0.10) -> List[str]:
+    """Return failure strings (empty == pass). Gates ratio metrics at
+    ``baseline * (1 - tolerance)`` and correctness flags at True."""
+    fails: List[str] = []
+    if current.get("schema_version") != baseline.get("schema_version"):
+        fails.append(f"schema_version {current.get('schema_version')} != "
+                     f"baseline {baseline.get('schema_version')}")
+        return fails
+    for path in GATED_RATIOS:
+        base_vals = dict(_lookup(baseline, path))
+        for name, cur in _lookup(current, path):
+            base = base_vals.get(name)
+            if base is None:
+                continue                    # bucket absent from baseline
+            floor = base * (1.0 - tolerance)
+            if cur < floor:
+                fails.append(f"{name}: {cur:.3f} < floor {floor:.3f} "
+                             f"(baseline {base:.3f}, tol {tolerance:.0%})")
+    for path in GATED_FLAGS:
+        for name, cur in _lookup(current, path):
+            if cur is not True:
+                fails.append(f"{name}: expected True, got {cur!r}")
+    return fails
+
+
+def to_text(doc: Dict) -> str:
+    lines = [f"# round-fusion bench (schema v{doc['schema_version']}, "
+             f"device={doc['env']['device']})",
+             "", "| jobs | unfused ms | fused ms | speedup | assign == |",
+             "|---|---|---|---|---|"]
+    for k, b in sorted(doc["solver"]["buckets"].items(),
+                       key=lambda kv: int(kv[0])):
+        lines.append(f"| {b['jobs']} | {b['unfused_ms']:.2f} "
+                     f"| {b['fused_ms']:.2f} | {b['fused_speedup']:.2f}x "
+                     f"| {b['assign_equal']} |")
+    e = doc["e2e"]
+    lines += ["",
+              f"e2e {e['cell']}: {e['jobs']} jobs — jax "
+              f"{e['jax_jobs_per_s']:.0f} jobs/s, fused "
+              f"{e['fused_jobs_per_s']:.0f} jobs/s "
+              f"({e['fused_speedup']:.2f}x), records_equal="
+              f"{e['records_equal']}"]
+    f = doc["forecaster"]
+    lines += [f"forecaster: fit {f['fit_wall_s']:.2f}s "
+              f"({f['train_steps']} steps), infer "
+              f"{f['infer_wall_s'] * 1e3:.1f}ms, retraces "
+              f"train={f['train_retraces']} predict={f['predict_retraces']}"]
+    return "\n".join(lines)
+
+
+README_BEGIN = "<!-- BENCH_6:begin (benchmarks.bench --update-readme) -->"
+README_END = "<!-- BENCH_6:end -->"
+
+
+def to_readme(doc: Dict) -> str:
+    """The README perf block, regenerated verbatim from the document."""
+    e, fc = doc["e2e"], doc["forecaster"]
+    lines = [README_BEGIN,
+             f"Committed baseline (`BENCH_6.json`, schema "
+             f"v{doc['schema_version']}, {doc['env']['device']} / jax "
+             f"{doc['env']['jax']}):", "",
+             "| temporal round | unfused | fused | speedup | bit-equal |",
+             "|---|---|---|---|---|"]
+    for k, b in sorted(doc["solver"]["buckets"].items(),
+                       key=lambda kv: int(kv[0])):
+        lines.append(f"| {b['jobs']} jobs × {doc['solver']['slots']} slots "
+                     f"× {doc['solver']['regions']} regions "
+                     f"| {b['unfused_ms']:.1f} ms | {b['fused_ms']:.1f} ms "
+                     f"| {b['fused_speedup']:.2f}× | {b['assign_equal']} |")
+    lines += [
+        "",
+        f"End-to-end on the standard diurnal cell ({e['jobs']} borg-trace "
+        f"jobs through the `waterwise-forecast` oracle pipeline): "
+        f"**{e['jax_jobs_per_s']:.0f} jobs/s** unfused → "
+        f"**{e['fused_jobs_per_s']:.0f} jobs/s** fused "
+        f"({e['fused_speedup']:.2f}×), engine records bit-identical "
+        f"(`records_equal={e['records_equal']}`). Learned forecaster: "
+        f"fit {fc['fit_wall_s']:.1f} s ({fc['train_steps']} steps), "
+        f"re-condition + predict {fc['infer_wall_s'] * 1e3:.1f} ms, "
+        f"{fc['train_retraces']} train / {fc['predict_retraces']} predict "
+        f"retrace(s).",
+        README_END]
+    return "\n".join(lines)
+
+
+def update_readme(doc: Dict, path: str = "README.md") -> None:
+    with open(path) as fh:
+        text = fh.read()
+    i, j = text.index(README_BEGIN), text.index(README_END)
+    text = text[:i] + to_readme(doc) + text[j + len(README_END):]
+    with open(path, "w") as fh:
+        fh.write(text)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--out", help="write the JSON document here")
+    ap.add_argument("--check", metavar="BASELINE",
+                    help="compare against a committed baseline JSON; "
+                         "exit 1 on regression")
+    ap.add_argument("--tolerance", type=float, default=0.10,
+                    help="allowed relative drop in gated ratios "
+                         "(default 0.10)")
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller buckets / fewer reps (CI lane)")
+    ap.add_argument("--update-readme", action="store_true",
+                    help="regenerate the README perf block from the "
+                         "document")
+    ap.add_argument("--load", metavar="FILE",
+                    help="load an existing document instead of running "
+                         "the bench (for --update-readme / --check "
+                         "plumbing)")
+    args = ap.parse_args(argv)
+
+    t0 = time.time()
+    if args.load:
+        with open(args.load) as fh:
+            doc = json.load(fh)
+    else:
+        doc = run_bench(quick=args.quick)
+    print(to_text(doc))
+    print(f"\n# bench wall: {time.time() - t0:.1f}s")
+    if args.update_readme:
+        update_readme(doc)
+        print("# updated README.md perf block")
+    if args.out:
+        with open(args.out, "w") as fh:
+            json.dump(doc, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+        print(f"# wrote {args.out}")
+    if args.check:
+        with open(args.check) as fh:
+            baseline = json.load(fh)
+        fails = check(doc, baseline, args.tolerance)
+        if fails:
+            print("# REGRESSION GATE FAILED:", file=sys.stderr)
+            for f in fails:
+                print(f"#   {f}", file=sys.stderr)
+            return 1
+        print(f"# gate ok vs {args.check} (tol {args.tolerance:.0%})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

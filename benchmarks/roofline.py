@@ -13,6 +13,7 @@ import os
 from typing import Dict, List, Optional
 
 from repro.configs import SHAPES, get_config, list_archs
+from repro.launch.dryrun import HW
 
 # Active params per token (MoE: shared + top-k routed + attn/embed).
 ACTIVE_PARAMS = {
@@ -50,7 +51,6 @@ def loop_factor(cell: Dict) -> int:
 
 
 def corrected_terms(cell: Dict) -> Dict[str, float]:
-    from repro.launch.dryrun import HW
     f = loop_factor(cell)
     r = cell["roofline"]
     return dict(t_compute=r["t_compute"] * f, t_memory=r["t_memory"] * f,
@@ -62,7 +62,8 @@ def load_cells(out_dir: str = "results/dryrun",
     cells = []
     for path in sorted(glob.glob(os.path.join(out_dir,
                                               f"*.{variant}.json"))):
-        cells.append(json.load(open(path)))
+        with open(path) as f:
+            cells.append(json.load(f))
     return cells
 
 
@@ -72,7 +73,6 @@ def table(out_dir: str = "results/dryrun", variant: str = "baseline",
     lower bound — XLA-CPU counts loop bodies once). Tc_model is the
     analytic MODEL_FLOPS reference (× 4/3 remat for train); MFU@bound =
     Tc_model / max(corrected terms) — the roofline fraction we score."""
-    from repro.launch.dryrun import HW
     rows = []
     hdr = ("| arch | shape | mesh | ×loop | Tc (s) | Tm (s) | Tx (s) "
            "| dominant | Tc_model (s) | peak GiB (adj) |")

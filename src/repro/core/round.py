@@ -1,0 +1,409 @@
+"""One fused scheduling round: pricing → masking → Sinkhorn → extraction
+as a SINGLE jitted XLA program.
+
+The hot path of a WaterWise scheduling round used to be several separately-
+jitted pieces with host round-trips between them: ``problem.build`` /
+``forecast.planner.build_temporal_plan`` priced the (jobs × regions × slots)
+grid in numpy, ``jax_solver._prepare`` normalized and padded on the host,
+``sinkhorn_log`` ran on device, the duals came back to the host, went *back*
+to the device for ``plan_from_duals``, and the plan returned once more for
+rounding. This module fuses everything between the raw per-round tensors and
+the (host-side, inherently sequential) greedy vertex rounding into one XLA
+computation:
+
+  ``_assignment_program``   soft-cost folding → arc masking → cost
+                            normalization → balanced-OT reduction → annealed
+                            log-domain Sinkhorn → plan extraction, one jit.
+                            Registered as solver backend ``"fused"`` — a
+                            drop-in for ``"jax"`` everywhere a backend name
+                            is accepted (``waterwise[backend=fused]``).
+  ``_temporal_program``     additionally fuses the *pricing* of the
+                            jobs × (regions × slots) decision grid (paper
+                            Eqs 1-8 via ``core.footprint``, which is pure
+                            arithmetic and traces transparently) and the
+                            deadline-feasibility masking (Eq 11 + guard)
+                            into the same program. Driven by
+                            ``ForecastPricer`` when the pipeline backend is
+                            ``"fused"`` (``waterwise-forecast[backend=fused]``).
+
+Round-trip discipline — the actual perf content of the fusion:
+
+  * everything that varies per round is packed into one contiguous per-job
+    blob plus one small region-attribute array, so a temporal round costs
+    TWO host→device copies instead of ~20 small ones;
+  * per-pipeline constants (λ weights, guard, slot offsets, server spec)
+    are compile-time static — zero per-round transfer;
+  * inputs are padded on the HOST to the row buckets of
+    ``jax_solver.BUCKETS`` and the true job count rides along inside a
+    traced array, so a whole simulation — thousands of rounds with jittery
+    window sizes — compiles each program once per bucket, exactly like the
+    unfused path (padding rows carry zero log-domain mass and are exact
+    no-ops in every Sinkhorn update);
+  * only the normalized costs and the extracted plan return to the host
+    (one transfer); the priced cost/mask tensors stay on device unless the
+    caller records windows for offline replay.
+
+The Sinkhorn inner loop runs the XLA scan of ``jax_solver`` by default and
+can run the fused Pallas row/col-reduction kernel
+(``repro.kernels.sinkhorn``) instead where shapes allow — auto-selected on
+TPU, opt-in elsewhere (interpret mode is for validation, not speed).
+
+Parity contract (pinned in tests/test_round.py): for identical inputs the
+fused and unfused paths produce **bit-identical scheduling decisions** —
+the same assignment vector, hold/defer split, and feasibility status per
+round, and therefore bit-identical engine records end-to-end. Dual
+potentials may differ in low-order bits (the fused program normalizes in
+float32 on device where the unfused path staged through float64 numpy), but
+the decisions they round to are pinned equal per dtype/shape bucket.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import footprint, solvers
+from repro.core.solvers import jax_solver
+from repro.core.solvers.jax_solver import BIG, _NEG, bucket_for
+
+__all__ = ["fused_solve", "fused_temporal_round", "sinkhorn_impl_default"]
+
+
+def sinkhorn_impl_default() -> str:
+    """``pallas`` on TPU (the fused row/col-reduction kernel), ``xla``
+    elsewhere (interpret-mode Pallas is a validation path, not a fast one)."""
+    return "pallas" if jax.devices()[0].platform == "tpu" else "xla"
+
+
+def _pad_rows(rows: int):
+    """(bucket, job-row pad): job tensors are padded to ``bucket − 1`` rows
+    so that [padded jobs | dummy slack row] fills the bucket exactly."""
+    bucket = bucket_for(rows + 1)
+    return bucket, bucket - 1 - rows
+
+
+def _pad0(x, pad: int, value=0):
+    """Pad job-axis tensors with ``pad`` constant rows."""
+    if pad == 0:
+        return x
+    width = ((0, pad),) + ((0, 0),) * (x.ndim - 1)
+    return np.pad(x, width, constant_values=value)
+
+
+def _interpret(impl: str, interpret: Optional[bool]) -> bool:
+    if interpret is not None:
+        return bool(interpret)
+    return impl == "pallas" and jax.devices()[0].platform != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# Fused inner stages (traced pieces shared by both programs)
+# ---------------------------------------------------------------------------
+
+def _prepare_device(c_eff, mask, cap, valid):
+    """Traced equivalent of ``jax_solver._prepare``: normalize costs to
+    ~unit scale, price forbidden arcs at BIG, append the balanced-OT dummy
+    supply row. ``valid`` marks real job rows; padding rows get zero mass
+    (log marginal ``_NEG``) and are exact no-ops in the log-domain updates."""
+    Mb, N = c_eff.shape
+    scale = jnp.maximum(jnp.max(jnp.where(mask, jnp.abs(c_eff), 0.0)), 1e-9)
+    Cn = jnp.where(mask, c_eff / scale, BIG).astype(jnp.float32)
+    C = jnp.concatenate([Cn, jnp.zeros((1, N), jnp.float32)], axis=0)
+    m_true = valid.sum()
+    slack = jnp.maximum(cap.sum() - m_true, 1e-9)
+    total = m_true + slack
+    log_a = jnp.concatenate([
+        jnp.where(valid, -jnp.log(total), _NEG),
+        jnp.log(slack / total)[None]]).astype(jnp.float32)
+    log_b = jnp.log(jnp.maximum(cap, 1e-12) / total).astype(jnp.float32)
+    return C, log_a, log_b, Cn, scale
+
+
+def _sinkhorn_pallas(C, log_a, log_b, *, eps0: float, eps_min: float,
+                     iters: int, anneal_stages: int, interpret: bool):
+    """ε-annealed Sinkhorn with the fused Pallas iteration kernel as the
+    inner loop. The kernel's ε is a compile-time constant, so the anneal
+    schedule is unrolled in Python (``anneal_stages`` is static and small)
+    with one ``fori_loop`` per stage. The kernel updates (f ← g, then
+    g ← f) where the XLA path updates (g ← f, then f ← g); both converge
+    to the same transport polytope vertex as ε → 0."""
+    from repro.kernels.sinkhorn.ops import sinkhorn_iteration
+    decay = (eps_min / eps0) ** (1.0 / max(anneal_stages - 1, 1))
+    f = jnp.zeros(C.shape[0], jnp.float32)
+    g = jnp.zeros(C.shape[1], jnp.float32)
+    eps = eps0
+    for s in range(anneal_stages):
+        eps = eps0 * decay ** s
+
+        def body(_, fg, _eps=eps):
+            return sinkhorn_iteration(C, fg[0], fg[1], log_a, log_b, _eps,
+                                      interpret=interpret)
+
+        f, g = jax.lax.fori_loop(0, iters, body, (f, g))
+    return f, g, eps
+
+
+def _solve_core(c_eff, mask, cap, valid, *, impl: str, eps0: float,
+                eps_min: float, iters: int, anneal_stages: int,
+                interpret: bool):
+    """prepare → annealed Sinkhorn → plan extraction, all traced. Returns
+    the (padded-row) normalized cost matrix, row-normalized plan, and the
+    normalization scale; the host slices off the padding."""
+    C, log_a, log_b, Cn, scale = _prepare_device(c_eff, mask, cap, valid)
+    if impl == "pallas":
+        f, g, eps = _sinkhorn_pallas(C, log_a, log_b, eps0=eps0,
+                                     eps_min=eps_min, iters=iters,
+                                     anneal_stages=anneal_stages,
+                                     interpret=interpret)
+    else:
+        f, g, eps = jax_solver._sinkhorn_log_impl(
+            C, log_a, log_b, eps0, eps_min, iters, anneal_stages)
+    X = jnp.exp((f[:, None] + g[None, :] - C) / eps)[:Cn.shape[0]]
+    X = X / jnp.maximum(X.sum(axis=1, keepdims=True), 1e-30)
+    return Cn, X, scale
+
+
+# ---------------------------------------------------------------------------
+# Program 1: the fused assignment solve (solver backend "fused")
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=(
+    "soften", "sigma", "impl", "eps0", "eps_min", "iters", "anneal_stages",
+    "interpret"))
+def _assignment_program(arcs, tolv, cap, *, soften: bool, sigma: float,
+                        impl: str, eps0: float = 0.5, eps_min: float = 0.005,
+                        iters: int = 60, anneal_stages: int = 6,
+                        interpret: bool = False):
+    """Soft-cost folding + masking + prepare + Sinkhorn + extraction as one
+    XLA computation (the device half of the ``"fused"`` backend).
+
+    ``arcs`` packs [cost | allowed(0/1) | overrun] as one [3, Mb, C] upload;
+    ``tolv`` packs [tol | row-validity] as [Mb, 2] — bucket-padded, with the
+    true job count implied by the validity column.
+    """
+    cost, allowed, overrun = arcs[0], arcs[1] > 0.5, arcs[2]
+    tol, valid = tolv[:, 0], tolv[:, 1] > 0.5
+    if soften:
+        excess = jnp.maximum(overrun - tol[:, None], 0.0)
+        c_eff = cost + sigma * excess
+        mask = valid[:, None] & jnp.ones_like(allowed)
+    else:
+        c_eff = cost
+        mask = valid[:, None] & allowed
+    Cn, X, _ = _solve_core(c_eff, mask, cap, valid, impl=impl, eps0=eps0,
+                           eps_min=eps_min, iters=iters,
+                           anneal_stages=anneal_stages, interpret=interpret)
+    return Cn, X
+
+
+@solvers.register("fused")
+def fused_solve(cost: np.ndarray, allowed: np.ndarray, capacity: np.ndarray,
+                *, soften: bool = False,
+                overrun: Optional[np.ndarray] = None,
+                tol: Optional[np.ndarray] = None, sigma: float = 10.0,
+                eps_min: float = 0.005,
+                sinkhorn_impl: Optional[str] = None,
+                interpret: Optional[bool] = None) -> solvers.SolveResult:
+    """Drop-in ``"jax"``-backend replacement with the device work fused
+    into one program: ONE dispatch and ONE host transfer per round instead
+    of host prepare → Sinkhorn → host → plan extraction → host. The greedy
+    vertex rounding + exact SSP repair + 2-swap polish stay on the host
+    (inherently sequential, microseconds at scheduling sizes)."""
+    def run() -> solvers.SolveResult:
+        M, N = cost.shape
+        cap = capacity.astype(np.int64)
+        if int(cap.sum()) < M or \
+                not (soften or allowed.any(axis=1).all()):
+            return _infeasible(M)
+        _, pad = _pad_rows(M)
+        impl = sinkhorn_impl or sinkhorn_impl_default()
+        arcs = np.stack([
+            _pad0(cost, pad),
+            _pad0(allowed.astype(np.float64), pad),
+            _pad0(overrun if overrun is not None else np.zeros((M, N)),
+                  pad)]).astype(np.float32)
+        tolv = np.stack([
+            _pad0(tol if tol is not None else np.zeros(M), pad),
+            _pad0(np.ones(M), pad)], axis=1).astype(np.float32)
+        Cn, X = _assignment_program(
+            jnp.asarray(arcs), jnp.asarray(tolv),
+            jnp.asarray(cap, jnp.float32),
+            soften=bool(soften), sigma=float(sigma), impl=impl,
+            eps_min=float(eps_min), interpret=_interpret(impl, interpret))
+        Cn, X = jax.device_get((Cn, X))
+        c_eff, mask = jax_solver._effective(cost, allowed, soften, overrun,
+                                            tol, sigma)
+        res = jax_solver._finalize(np.asarray(X[:M], np.float64),
+                                   np.asarray(Cn[:M], np.float64), c_eff,
+                                   mask, cap, soften, overrun, tol)
+        res.backend = "fused"
+        return res
+    return solvers._timed(run)
+
+
+def _infeasible(M: int) -> solvers.SolveResult:
+    res = jax_solver._infeasible(M)
+    res.backend = "fused"
+    return res
+
+
+# ---------------------------------------------------------------------------
+# Program 2: the fused temporal round (pricing + masking + solve)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=(
+    "offsets", "lam_co2", "lam_h2o", "defer_eps", "guard_s", "lifetime_s",
+    "embodied_gco2", "embodied_water_l", "want_plan", "impl", "eps0",
+    "eps_min", "iters", "anneal_stages", "interpret"))
+def _temporal_program(blob, rattrs, *,
+                      offsets: tuple, lam_co2: float, lam_h2o: float,
+                      defer_eps: float, guard_s: float, lifetime_s: float,
+                      embodied_gco2: float, embodied_water_l: float,
+                      want_plan: bool, impl: str,
+                      eps0: float = 0.5, eps_min: float = 0.005,
+                      iters: int = 60, anneal_stages: int = 6,
+                      interpret: bool = False):
+    """The whole forecast-driven round on device: Eq 1/5 footprint pricing
+    over the (jobs × slots × regions) grid, Eq-7 normalization, the λ-mixed
+    Eq-8 objective + per-slot deferral ramp, the Eq-11 deadline/guard
+    feasibility mask, and the fused prepare/Sinkhorn/extraction.
+
+    Mirrors ``forecast.planner.build_temporal_plan`` exactly (the parity
+    tests pin the decisions); ``core.footprint`` is pure arithmetic, so the
+    same Eq 1-6 implementations trace unchanged.
+
+    Packed inputs (host→device copies, not semantics) — everything that
+    varies per round rides in TWO arrays, so a round costs two host→device
+    copies total:
+      blob    [Mb, 4 + 3SR + 2R]  per-job columns:
+                [E | exec_t | slack budget | row-validity    (4)
+                 | ci, ewif, wue forecast rows, slot-major   (3SR)
+                 | latency | slot-0 Eq-11 mask (0/1)         (2R)]
+      rattrs  [4, R]              pue | wsf | λ_ref history row | capacity
+    Per-pipeline constants are static: compiled straight into the program.
+    """
+    Mb = blob.shape[0]
+    S = len(offsets)
+    R = rattrs.shape[1]
+    E, t = blob[:, 0, None, None], blob[:, 1, None, None]
+    budget, valid = blob[:, 2], blob[:, 3] > 0.5
+    signals = blob[:, 4:4 + 3 * S * R].reshape(Mb, S, 3 * R)
+    latency = blob[:, 4 + 3 * S * R:4 + 3 * S * R + R]
+    allowed0 = blob[:, 4 + 3 * S * R + R:]
+    ci = signals[..., :R]
+    ewif = signals[..., R:2 * R]
+    wue = signals[..., 2 * R:]
+    pue, wsf, ref_row, cap = rattrs[0], rattrs[1], rattrs[2], rattrs[3]
+
+    co2 = footprint.total_carbon(E, ci, t, lifetime_s, embodied_gco2)
+    h2o = footprint.total_water(E, pue[None, None, :], ewif, wue,
+                                wsf[None, None, :], t, lifetime_s,
+                                embodied_water_l)
+    co2_max = jnp.maximum(co2.max(axis=(1, 2)), 1e-9)
+    h2o_max = jnp.maximum(h2o.max(axis=(1, 2)), 1e-9)
+    obj = (lam_co2 * co2 / co2_max[:, None, None]
+           + lam_h2o * h2o / h2o_max[:, None, None])
+    obj = obj + ref_row[None, None, :]
+    obj = obj + defer_eps * jnp.arange(S)[None, :, None]
+
+    need = jnp.asarray(offsets)[None, :, None] + latency[:, None, :]
+    allowed = need + guard_s <= budget[:, None, None] + 1e-9
+    allowed = allowed.at[:, 0, :].set(allowed0 > 0.5)
+
+    cost = obj.reshape(Mb, S * R)
+    mask = valid[:, None] & allowed.reshape(Mb, S * R)
+    cap_t = jnp.tile(cap, S)
+    Cn, X, scale = _solve_core(cost, mask, cap_t, valid, impl=impl,
+                               eps0=eps0, eps_min=eps_min, iters=iters,
+                               anneal_stages=anneal_stages,
+                               interpret=interpret)
+    if want_plan:
+        return Cn, X, scale, cost, mask
+    return Cn, X, scale
+
+
+def fused_temporal_round(inst, now_s: float, ci, ewif, wue, pue, wsf,
+                         slot_offsets, server, lam_co2: float,
+                         lam_h2o: float, lam_ref: float = 0.0,
+                         co2_ref=None, h2o_ref=None,
+                         defer_eps: float = 1e-3, guard_s: float = 240.0,
+                         want_plan: bool = False,
+                         sinkhorn_impl: Optional[str] = None,
+                         interpret: Optional[bool] = None,
+                         eps_min: float = 0.005):
+    """Price, mask, and solve one forecast round in a single device dispatch.
+
+    Same signature family as ``forecast.planner.build_temporal_plan`` (the
+    unfused path), plus the solve. Returns ``(cost, allowed, capacity,
+    SolveResult)``. The priced cost/mask tensors only leave the device when
+    ``want_plan`` is set (offline window recording) — the feasibility check,
+    rounding, and objective all run off the returned normalized costs, whose
+    forbidden arcs are exactly BIG — otherwise ``(None, None, ...)``.
+    """
+    jobs = inst.jobs
+    M, N = inst.shape
+    S = len(slot_offsets)
+    assert slot_offsets[0] == 0.0 and ci.shape == (M, S, N)
+    if co2_ref is not None and h2o_ref is not None:
+        ref_row = lam_ref * (lam_co2 * np.asarray(co2_ref)
+                             + lam_h2o * np.asarray(h2o_ref))
+    else:
+        ref_row = np.zeros(N)
+
+    cap = np.asarray(inst.capacity, np.int64)
+    bucket, _ = _pad_rows(M)
+    impl = sinkhorn_impl or sinkhorn_impl_default()
+
+    t0 = time.perf_counter()
+    # One zero-initialized padded blob, filled in place: padding rows fall
+    # out as zero-mass (validity 0) rows and the whole round uploads as two
+    # contiguous copies (blob + rattrs).
+    W = 4 + 3 * S * N + 2 * N
+    blob = np.zeros((bucket - 1, W), np.float32)
+    for i, j in enumerate(jobs):
+        blob[i, 0] = j.energy_kwh
+        blob[i, 1] = j.exec_time_s
+        blob[i, 2] = j.slack_budget_s(now_s)
+        blob[i, 3] = 1.0
+    # slot-major [ci | ewif | wue] per slot — [S, 3R] blocks flattened
+    blob[:M, 4:4 + 3 * S * N] = np.concatenate(
+        [ci, ewif, wue], axis=2).reshape(M, 3 * S * N)
+    blob[:M, 4 + 3 * S * N:4 + 3 * S * N + N] = inst.latency
+    blob[:M, 4 + 3 * S * N + N:] = inst.allowed
+    rattrs = np.stack([pue, wsf, ref_row, cap]).astype(np.float32)
+    out = _temporal_program(
+        jnp.asarray(blob), jnp.asarray(rattrs),
+        offsets=tuple(float(o) for o in slot_offsets),
+        lam_co2=float(lam_co2), lam_h2o=float(lam_h2o),
+        defer_eps=float(defer_eps), guard_s=float(guard_s),
+        lifetime_s=float(server.lifetime_s),
+        embodied_gco2=float(server.embodied_gco2),
+        embodied_water_l=float(server.embodied_water_l),
+        want_plan=bool(want_plan), impl=impl, eps_min=float(eps_min),
+        interpret=_interpret(impl, interpret))
+    out = jax.device_get(out)
+    Cn = np.asarray(out[0][:M], np.float64)
+    X = np.asarray(out[1][:M], np.float64)
+    scale = float(out[2])
+    mask = Cn < BIG * 0.5          # forbidden arcs are exactly BIG
+    # De-normalized costs price the objective; identical to the priced
+    # tensor on every allowed arc (forbidden arcs never enter objectives).
+    c_eff = np.where(mask, Cn * scale, solvers.BIG)
+    cap_t = np.tile(cap, S)
+
+    if int(cap_t.sum()) < M or not mask.any(axis=1).all():
+        res = _infeasible(M)
+    else:
+        res = jax_solver._finalize(X, Cn, c_eff, mask, cap_t,
+                                   False, None, None)
+        res.backend = "fused"
+    res.solve_time_s = time.perf_counter() - t0
+    if want_plan:
+        cost = np.asarray(out[3][:M], np.float64)
+        allowed = np.asarray(out[4][:M], bool)
+        return cost, allowed, cap_t, res
+    return None, None, cap_t, res

@@ -15,6 +15,10 @@ Interchangeable backends behind one interface:
   ``jax``    jittable entropic-OT (log-space Sinkhorn) + vertex rounding —
              the beyond-paper TPU-native solver (see kernels/sinkhorn for the
              Pallas row/col-reduction kernel).
+  ``fused``  the ``jax`` backend with every device stage (soft-cost fold,
+             masking, normalization, OT padding, annealed Sinkhorn, plan
+             extraction) fused into ONE jitted program — one dispatch and
+             one host transfer per round (see ``repro.core.round``).
 
 All backends consume a cost matrix + arc filter + capacities and return a
 ``SolveResult``. ``soften=True`` activates the paper's penalty method
@@ -81,6 +85,7 @@ def get_solver(name: str) -> Callable:
         # offline container); its module import is a no-op when unavailable.
         from repro.core.solvers import (  # noqa: F401
             flow_solver, jax_solver, pulp_solver, scipy_solver)
+        from repro.core import round  # noqa: F401  (registers "fused")
     if name not in _REGISTRY:
         raise KeyError(f"solver backend {name!r} unavailable; "
                        f"have {sorted(_REGISTRY)}")

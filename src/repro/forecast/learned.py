@@ -154,11 +154,40 @@ def _pinball(q, y):
     return jnp.mean(jnp.maximum(levels * d, (levels - 1.0) * d))
 
 
-@functools.lru_cache(maxsize=None)
+#: Bound on the per-config jitted train/infer caches below. Sweeps iterate
+#: over many forecaster configs in one process; an unbounded cache pins
+#: every config's compiled executables (and their device buffers) for the
+#: process lifetime. LRU-evicting a config merely costs a retrace if it
+#: comes back.
+CACHE_CONFIGS = 32
+
+#: Factory-build counters: each build is one fresh set of jit compilations
+#: (a cache miss OR a re-build after LRU eviction), so ``builds − misses``
+#: counts evictions and ``builds`` counts retraces. Read via
+#: :func:`cache_stats` (the perf harness reports these).
+_BUILDS = {"train_step": 0, "predict_fn": 0}
+
+
+def cache_stats() -> dict:
+    """Cache/retrace accounting for the perf harness: per-cache lru stats
+    (hits/misses/currsize/maxsize) plus total factory builds (== jit
+    retrace sets, counting rebuilds after eviction)."""
+    out = {}
+    for name, fn in (("train_step", _train_step),
+                     ("predict_fn", _predict_fn)):
+        info = fn.cache_info()
+        out[name] = dict(hits=info.hits, misses=info.misses,
+                         currsize=info.currsize, maxsize=info.maxsize,
+                         builds=_BUILDS[name])
+    return out
+
+
+@functools.lru_cache(maxsize=CACHE_CONFIGS)
 def _train_step(horizon: int, period: int, scan_impl: str, lr: float,
                 weight_decay: float, train_steps: int):
     """(optimizer, jitted step) — cached per config so refits and multiple
     forecaster instances share one compiled executable per batch shape."""
+    _BUILDS["train_step"] += 1
     opt = _adamw(
         lr=cosine_schedule(lr, max(train_steps // 10, 1),
                            max(train_steps, 1)),
@@ -178,10 +207,11 @@ def _train_step(horizon: int, period: int, scan_impl: str, lr: float,
     return opt, step, jax.jit(loss_fn)
 
 
-@functools.lru_cache(maxsize=None)
+@functools.lru_cache(maxsize=CACHE_CONFIGS)
 def _predict_fn(horizon: int, period: int, scan_impl: str):
     """Jitted batched (per-column) inference, compiled once per padded
     [columns, window] shape."""
+    _BUILDS["predict_fn"] += 1
     @jax.jit
     def run(params, xw):
         return _quantiles_from_windows(params, xw, horizon, period,
@@ -220,10 +250,11 @@ class LearnedForecaster(base.Forecaster):
           retrain_every: retrain after this many subsequent ``fit`` calls
             (the walk-forward refit cadence; 0 = train once, never again).
           seed: PRNG seed for init and batch sampling (fully deterministic).
-          scan_impl: inference recurrence implementation — ``assoc`` (XLA
-            associative scan) or ``pallas`` (the ``repro.kernels
-            .rglru_scan`` kernel; interpret mode off-TPU). Training always
-            uses the differentiable associative scan.
+          scan_impl: linear-recurrence implementation for BOTH training and
+            inference — ``assoc`` (XLA associative scan) or ``pallas`` (the
+            ``repro.kernels.rglru_scan`` kernel; interpret mode off-TPU).
+            The kernel is differentiable via its custom VJP, so training
+            runs through it too.
           checkpoint: optional directory saved by :meth:`save` — restores
             the trained parameters (and their config) at construction.
         """
@@ -321,12 +352,12 @@ class LearnedForecaster(base.Forecaster):
 
         Xtr, Ytr = flat(X[:n_tr]), flat(Y[:n_tr])
         params = init_params(jax.random.PRNGKey(self.seed), self.d_model, H)
-        # Training always runs the differentiable associative scan; the
-        # Pallas kernel (scan_impl="pallas") is a forward-only inference
-        # path (no JVP rule), pinned against the reference in the kernel
-        # parity tests.
+        # Training runs whatever recurrence the config selects: the Pallas
+        # kernel carries a custom VJP (its backward pass is one more kernel
+        # scan on reversed time — see kernels/rglru_scan/ops.py), with
+        # gradient parity against the associative scan pinned in tests.
         opt, step, val_loss = _train_step(
-            H, self.period, "assoc", self.lr, self.weight_decay,
+            H, self.period, self.scan_impl, self.lr, self.weight_decay,
             self.train_steps)
         state = opt.init(params)
         rng = np.random.default_rng(self.seed)

@@ -1,7 +1,27 @@
-"""Public wrapper for the RG-LRU scan kernel (interpret fallback on CPU)."""
+"""Public wrapper for the RG-LRU scan kernel (interpret fallback on CPU).
+
+The kernel entry carries a custom VJP, so learned-forecaster *training* can
+run through the Pallas kernel too (``scan_impl="pallas"``) instead of
+silently requiring the associative scan. For the linear recurrence
+
+    y_t = a_t · y_{t−1} + b_t,          y_{−1} = 0
+
+the reverse-mode cotangents satisfy the *reverse* linear recurrence
+
+    ğ_t = ȳ_t + a_{t+1} · ğ_{t+1},      ğ_S = 0
+    ∂a_t = ğ_t · y_{t−1},               ∂b_t = ğ_t
+
+which is the same recurrence on time-reversed inputs with the gates shifted
+by one step — so the backward pass is one more call of the forward kernel
+(flip → scan → flip), keeping training HBM-optimal as well. Gradient parity
+against the associative scan is pinned in tests/test_round.py.
+"""
 from __future__ import annotations
 
+import functools
+
 import jax
+import jax.numpy as jnp
 
 from repro.kernels.rglru_scan.rglru_scan import rglru_scan_pallas
 
@@ -10,6 +30,35 @@ def _on_tpu() -> bool:
     return jax.devices()[0].platform == "tpu"
 
 
-def rglru_scan(a, bx, *, chunk=128, interpret=None):
-    interpret = (not _on_tpu()) if interpret is None else interpret
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _scan(a, bx, chunk, interpret):
     return rglru_scan_pallas(a, bx, chunk=chunk, interpret=interpret)
+
+
+def _scan_fwd(a, bx, chunk, interpret):
+    y = rglru_scan_pallas(a, bx, chunk=chunk, interpret=interpret)
+    return y, (a, y)
+
+
+def _scan_bwd(chunk, interpret, residuals, gy):
+    a, y = residuals
+    # ğ_t = ȳ_t + a_{t+1}·ğ_{t+1} run as a forward scan on reversed time:
+    # gates become flip(a) delayed one step (the final gate never enters).
+    a_shift = jnp.concatenate(
+        [jnp.zeros_like(a[:, :1]), jnp.flip(a, axis=1)[:, :-1]], axis=1)
+    gt = jnp.flip(
+        rglru_scan_pallas(a_shift, jnp.flip(gy, axis=1), chunk=chunk,
+                          interpret=interpret), axis=1)
+    y_prev = jnp.concatenate(
+        [jnp.zeros_like(y[:, :1]), y[:, :-1]], axis=1)
+    return gt * y_prev, gt
+
+
+_scan.defvjp(_scan_fwd, _scan_bwd)
+
+
+def rglru_scan(a, bx, *, chunk=128, interpret=None):
+    """a, bx: [B, S, W] → y with y_t = a_t·y_{t−1} + bx_t. Differentiable:
+    both the forward and the backward pass run the Pallas kernel."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    return _scan(a, bx, chunk, interpret)

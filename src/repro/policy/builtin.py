@@ -25,7 +25,7 @@ _HELP: Dict[str, str] = {
     "lam_ref": "history-term weight λ_ref (Eq 8)",
     "window": "history-learner trailing window (rounds)",
     "sigma": "soft-violation penalty σ (Eqs 12-13)",
-    "backend": "solver backend (flow / jax / scipy / pulp)",
+    "backend": "solver backend (flow / jax / fused / scipy / pulp)",
     "defer_margin": "defer-arc price margin over the trailing-mean cost",
     "defer_slack_s": "min remaining TOL budget (s) to offer the defer arc",
     "record_windows": "record every solved window for offline batched replay",

@@ -136,6 +136,10 @@ class PricedPlan:
     # Slot-0 objective matrix when the pricer already computed it (reused by
     # the soft fallback instead of re-deriving from the instance).
     base_cost: Optional[np.ndarray] = None
+    # Hard-solve result when the pricer already ran the solver as part of a
+    # fused pricing+solving device program (``repro.core.round``); the
+    # pipeline uses it instead of dispatching ``solvers.solve`` again.
+    presolved: Optional[solvers.SolveResult] = None
 
 
 class Pricer:
@@ -387,6 +391,23 @@ class ForecastPricer(Pricer):
         self._refresh_forecast(now_s)
         offsets = np.arange(self.horizon_slots) * self.slot_s
         ci, ewif, wue = self._slot_signal_tensors(jobs, now_s, offsets)
+        if pipe.backend == "fused":
+            # Pricing, masking, Sinkhorn, and extraction run as ONE jitted
+            # program; the plan comes back already hard-solved (bit-identical
+            # decisions to the unfused path — pinned in tests/test_round.py).
+            from repro.core import round as fused_round
+            cost, allowed, cap, res = fused_round.fused_temporal_round(
+                inst, now_s, ci, ewif, wue, snap["pue"], snap["wsf"],
+                offsets, pipe.server, pipe.lam_co2, pipe.lam_h2o,
+                pipe.lam_ref, pipe.history.co2_ref, pipe.history.h2o_ref,
+                defer_eps=self.defer_eps, guard_s=self.guard_s,
+                want_plan=pipe.record_windows)
+            S = len(offsets)
+            return PricedPlan(cost=cost, allowed=allowed, capacity=cap,
+                              overrun=np.tile(inst.overrun, (1, S)),
+                              num_regions=inst.shape[1], num_slots=S,
+                              slot_offsets=np.asarray(offsets, np.float64),
+                              presolved=res)
         plan = self._fcast.build_temporal_plan(
             inst, now_s, ci, ewif, wue, snap["pue"], snap["wsf"], offsets,
             pipe.server, pipe.lam_co2, pipe.lam_h2o, pipe.lam_ref,
@@ -576,9 +597,13 @@ class PolicyPipeline:
         plan = self.pricer.price(due, now_s, inst, snap)
 
         softened = False
-        res = solvers.solve(plan.cost, plan.allowed, plan.capacity,
-                            backend=self.backend, soften=False,
-                            overrun=plan.overrun, tol=tol, sigma=self.sigma)
+        if plan.presolved is not None:
+            res = plan.presolved
+        else:
+            res = solvers.solve(plan.cost, plan.allowed, plan.capacity,
+                                backend=self.backend, soften=False,
+                                overrun=plan.overrun, tol=tol,
+                                sigma=self.sigma)
         if res.feasible:
             self._record(plan.cost, plan.allowed, plan.capacity,
                          plan.overrun, tol, False)

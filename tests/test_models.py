@@ -32,6 +32,7 @@ def _batch(cfg, B=2, S=32, seed=1):
     return batch
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCHS)
 def test_smoke_train_step(arch):
     cfg = get_config(arch, reduced=True)
@@ -67,6 +68,7 @@ def test_smoke_prefill_shapes(arch):
     assert cache is not None
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["qwen2_1_5b", "gemma3_4b", "mamba2_2_7b",
                                   "recurrentgemma_2b", "minicpm3_4b",
                                   "dbrx_132b"])

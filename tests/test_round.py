@@ -1,0 +1,290 @@
+"""Parity + invariants for the fused scheduling round (core.round).
+
+The contract pinned here: for identical inputs the fused single-program
+path and the unfused staged path produce **bit-identical scheduling
+decisions** — the same assignment vector and status per round (and
+therefore bit-identical engine records end-to-end). Plus the Eq-11 safety
+property that the fused deadline mask can never admit an infeasible slot,
+and gradient parity of the RG-LRU kernel's custom VJP (what lets the
+learned forecaster *train* through the Pallas kernel).
+"""
+import copy
+
+import numpy as np
+import pytest
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import footprint, problem, solvers, telemetry
+from repro.core.round import fused_solve, fused_temporal_round, _pad_rows
+from repro.core.solvers.jax_solver import bucket_for
+from repro.forecast import build_temporal_plan
+
+
+@pytest.fixture(scope="module")
+def tele():
+    return telemetry.generate(days=6, seed=0)
+
+
+def _rand_instance(rng, M, N, tight=False):
+    cost = rng.random((M, N)) * 10
+    allowed = rng.random((M, N)) > 0.2
+    allowed[np.arange(M), rng.integers(0, N, M)] = True   # no empty rows
+    slack = 0 if tight else N
+    cap = np.full(N, (M + slack) // N + 1)
+    return cost, allowed, cap
+
+
+# ---------------------------------------------------------------------------
+# Solver backend "fused" vs "jax": bit-exact per shape bucket
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("M,N", [(3, 4), (10, 5), (60, 6), (200, 8)])
+def test_fused_backend_matches_jax_bitwise(M, N):
+    """Hard assignment parity across shape buckets: same assignment vector,
+    same status, and the same float64 objective (both paths price the
+    rounded plan from the identical host-side effective costs)."""
+    rng = np.random.default_rng(M * 1000 + N)
+    cost, allowed, cap = _rand_instance(rng, M, N)
+    r_jax = solvers.solve(cost, allowed, cap, backend="jax")
+    r_fused = solvers.solve(cost, allowed, cap, backend="fused")
+    assert r_fused.backend == "fused"
+    assert r_jax.status == r_fused.status
+    np.testing.assert_array_equal(r_jax.assign, r_fused.assign)
+    assert r_jax.objective == r_fused.objective            # bit-equal
+
+
+@pytest.mark.parametrize("M,N", [(6, 4), (40, 5)])
+def test_fused_backend_soft_path_matches_jax(M, N):
+    rng = np.random.default_rng(M * 7 + N)
+    cost, allowed, cap = _rand_instance(rng, M, N)
+    overrun = rng.random((M, N)) * 3
+    tol = rng.random(M) * 2
+    kw = dict(soften=True, overrun=overrun, tol=tol, sigma=10.0)
+    r_jax = solvers.solve(cost, allowed, cap, backend="jax", **kw)
+    r_fused = solvers.solve(cost, allowed, cap, backend="fused", **kw)
+    assert r_jax.status == r_fused.status
+    np.testing.assert_array_equal(r_jax.assign, r_fused.assign)
+    assert r_jax.objective == r_fused.objective
+    np.testing.assert_array_equal(r_jax.penalties, r_fused.penalties)
+
+
+def test_fused_backend_infeasible():
+    cost = np.ones((4, 2))
+    allowed = np.ones((4, 2), bool)
+    res = solvers.solve(cost, allowed, np.array([1, 1]), backend="fused")
+    assert res.status == "infeasible" and (res.assign == -1).all()
+    # A row with no allowed arc is infeasible in the hard path too.
+    allowed[0] = False
+    res = solvers.solve(cost, allowed, np.array([4, 4]), backend="fused")
+    assert res.status == "infeasible"
+
+
+def test_fused_registered_in_registry():
+    assert "fused" in solvers.available_backends()
+
+
+# ---------------------------------------------------------------------------
+# The fused temporal round vs the unfused planner + solver
+# ---------------------------------------------------------------------------
+
+def _temporal_case(tele, rng, M, S=8, R=5, tolerance=4.0):
+    server = footprint.m5_metal()
+    offsets = np.arange(S) * 1800.0
+    jobs = [problem.Job(job_id=i, home_region=i % R, submit_time_s=0.0,
+                        exec_time_s=600.0 + 10 * i, energy_kwh=0.05,
+                        tolerance=tolerance) for i in range(M)]
+    cap = np.full(R, max(2, M // R + 1))
+    snap = tele.at(0.0)
+    inst = problem.build(jobs, tele, 0.0, cap, server, snap=snap)
+    ci = rng.random((M, S, R)) * 300 + 50
+    ewif = rng.random((M, S, R)) * 2 + 0.5
+    wue = rng.random((M, S, R)) * 1 + 0.2
+    return inst, snap, server, offsets, ci, ewif, wue
+
+
+@pytest.mark.parametrize("lam_co2,lam_h2o", [(0.5, 0.5), (1.0, 0.0),
+                                             (0.0, 1.0)])
+@pytest.mark.parametrize("M", [3, 17, 60])
+def test_fused_temporal_round_matches_unfused(tele, lam_co2, lam_h2o, M):
+    """waterwise / carbon-only / water-only pricing, three shape buckets:
+    the fused program's decisions are bit-identical to build_temporal_plan
+    + the jax solver."""
+    rng = np.random.default_rng(M)
+    inst, snap, server, offsets, ci, ewif, wue = _temporal_case(tele, rng, M)
+    plan = build_temporal_plan(inst, 0.0, ci, ewif, wue, snap["pue"],
+                               snap["wsf"], offsets, server, lam_co2,
+                               lam_h2o)
+    r_ref = solvers.solve(plan.cost, plan.allowed, plan.capacity,
+                          backend="jax")
+    _, _, cap_t, r_fused = fused_temporal_round(
+        inst, 0.0, ci, ewif, wue, snap["pue"], snap["wsf"], offsets, server,
+        lam_co2, lam_h2o)
+    assert r_fused.backend == "fused"
+    assert r_ref.status == r_fused.status
+    np.testing.assert_array_equal(r_ref.assign, r_fused.assign)
+    np.testing.assert_array_equal(cap_t, plan.capacity)
+
+
+def test_fused_temporal_round_want_plan_matches_planner(tele):
+    """want_plan=True returns the priced cost/mask tensors; they must agree
+    with the host planner's (mask exactly; costs to float32 round-trip —
+    the tensors price on device in f32)."""
+    rng = np.random.default_rng(7)
+    inst, snap, server, offsets, ci, ewif, wue = _temporal_case(tele, rng, 9)
+    plan = build_temporal_plan(inst, 0.0, ci, ewif, wue, snap["pue"],
+                               snap["wsf"], offsets, server, 0.5, 0.5)
+    cost, allowed, cap_t, res = fused_temporal_round(
+        inst, 0.0, ci, ewif, wue, snap["pue"], snap["wsf"], offsets, server,
+        0.5, 0.5, want_plan=True)
+    np.testing.assert_array_equal(allowed, plan.allowed)
+    np.testing.assert_allclose(cost[allowed], plan.cost[plan.allowed],
+                               rtol=2e-6)
+    assert res.feasible
+
+
+def test_round_buckets_match_solver_buckets():
+    """Host-side padding must land every M on a compiled-bucket shape so a
+    full simulation compiles once per bucket, exactly like jax_solver."""
+    for M in (1, 3, 4, 15, 16, 63, 200):
+        bucket, pad = _pad_rows(M)
+        assert bucket == bucket_for(M + 1)
+        assert bucket - 1 - M == pad >= 0
+
+
+# ---------------------------------------------------------------------------
+# Eq-11 safety: the fused mask never admits a deadline-infeasible slot
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(data=st.data())
+def test_fused_mask_never_admits_infeasible_slot(data):
+    """Property: whatever the (budget, latency, offsets, guard) draw, an
+    admitted (job, slot ≥ 1, region) arc always satisfies
+    offset + latency + guard ≤ slack budget, and slot 0 reproduces the
+    instance's Eq-11 mask exactly."""
+    tele_p = telemetry.generate(days=1, seed=1)
+    R = tele_p.num_regions
+    M = data.draw(st.integers(1, 7), label="jobs")
+    S = data.draw(st.integers(2, 6), label="slots")
+    slot_s = data.draw(st.sampled_from([600.0, 1800.0, 3600.0]))
+    guard_s = data.draw(st.sampled_from([0.0, 240.0, 900.0]))
+    tolerance = data.draw(st.floats(0.1, 6.0), label="tolerance")
+    server = footprint.m5_metal()
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**16)))
+    jobs = [problem.Job(job_id=i, home_region=i % R, submit_time_s=0.0,
+                        exec_time_s=float(rng.uniform(60, 4000)),
+                        energy_kwh=0.05, tolerance=tolerance)
+            for i in range(M)]
+    cap = np.full(R, M + 1)
+    snap = tele_p.at(0.0)
+    inst = problem.build(jobs, tele_p, 0.0, cap, server, snap=snap)
+    offsets = np.arange(S) * slot_s
+    ci = rng.random((M, S, R)) * 300 + 1
+    ewif = rng.random((M, S, R)) + 0.1
+    wue = rng.random((M, S, R)) + 0.1
+    _, allowed, _, _ = fused_temporal_round(
+        inst, 0.0, ci, ewif, wue, snap["pue"], snap["wsf"], offsets, server,
+        0.5, 0.5, guard_s=guard_s, want_plan=True)
+    budget = np.array([j.slack_budget_s(0.0) for j in jobs])
+    grid = allowed.reshape(M, S, R)
+    np.testing.assert_array_equal(grid[:, 0, :], inst.allowed)
+    need = offsets[None, 1:, None] + inst.latency[:, None, :] + guard_s
+    admitted = grid[:, 1:, :]
+    assert (need[admitted] <= budget[:, None, None]
+            .repeat(S - 1, 1).repeat(R, 2)[admitted] + 1e-9).all()
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: bit-identical engine records through the event simulator
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_e2e_records_bit_identical_jax_vs_fused(tele):
+    """The standard diurnal cell through the waterwise-forecast pipeline:
+    every scheduled record (region, start, finish, carbon, water) is
+    bit-identical between backend="jax" and backend="fused"."""
+    from repro.policy.pipeline import forecast_pipeline
+    from repro.sim.engine import EventSimulator, SimConfig
+    from repro.sim.trace import borg_trace, scale_capacity_for_utilization
+
+    jobs = borg_trace(days=0.03, seed=3, tolerance=4.0,
+                      target_jobs_per_day=23000.0)
+    cap = scale_capacity_for_utilization(jobs, 0.03, 5, 0.15)
+
+    def run(backend):
+        ctl = forecast_pipeline(tele, forecaster="oracle", risk=0.0,
+                                defer_eps=1e-4, backend=backend)
+        return EventSimulator(tele, cap, SimConfig()).run(
+            copy.deepcopy(jobs), ctl)
+
+    def key(r):
+        return (r.job.job_id, r.region, r.start_s, r.finish_s,
+                r.carbon_g, r.water_l)
+
+    r_jax, r_fused = run("jax"), run("fused")
+    assert r_jax["unfinished"] == r_fused["unfinished"] == 0
+    assert [key(r) for r in r_jax["records"]] \
+        == [key(r) for r in r_fused["records"]]
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU custom VJP: training gradients through the Pallas kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,W,chunk", [(2, 32, 16, 16), (3, 48, 8, 48),
+                                         (1, 64, 4, 16)])
+def test_rglru_vjp_matches_associative_scan(B, S, W, chunk):
+    """The kernel's custom VJP (reverse recurrence run as one more forward
+    kernel scan) must match autodiff through the associative scan."""
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.rglru_scan.ops import rglru_scan
+
+    rng = np.random.default_rng(B * 100 + S)
+    a = jnp.asarray(rng.uniform(0.2, 0.95, (B, S, W)), jnp.float32)
+    bx = jnp.asarray(rng.normal(size=(B, S, W)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(B, S, W)), jnp.float32)
+
+    def ref_scan(a, bx):
+        def op(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, ar * bl + br
+        _, y = jax.lax.associative_scan(op, (a, bx), axis=1)
+        return y
+
+    loss_k = lambda a, bx: jnp.sum(w * rglru_scan(a, bx, chunk=chunk))
+    loss_r = lambda a, bx: jnp.sum(w * ref_scan(a, bx))
+    gk = jax.grad(loss_k, argnums=(0, 1))(a, bx)
+    gr = jax.grad(loss_r, argnums=(0, 1))(a, bx)
+    np.testing.assert_allclose(gk[0], gr[0], atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(gk[1], gr[1], atol=1e-4, rtol=1e-4)
+
+
+def test_learned_forecaster_trains_through_pallas(tele):
+    """scan_impl="pallas" now trains (custom VJP) and must land on the
+    same parameters as the associative scan on the same draw."""
+    from repro import forecast
+
+    fits = {}
+    for impl in ("assoc", "pallas"):
+        f = forecast.make_forecaster("learned", train_steps=3, seed=0,
+                                     scan_impl=impl)
+        f.fit(tele.ci[:96])
+        assert f.train_count == 1
+        fits[impl] = (f.last_loss, f.predict(6).mean)
+    assert fits["assoc"][0] == pytest.approx(fits["pallas"][0], rel=1e-5)
+    np.testing.assert_allclose(fits["assoc"][1], fits["pallas"][1],
+                               rtol=1e-5, atol=1e-8)
+
+
+def test_learned_cache_stats_shape():
+    from repro.forecast import learned
+
+    stats = learned.cache_stats()
+    for name in ("train_step", "predict_fn"):
+        assert {"hits", "misses", "currsize", "maxsize",
+                "builds"} <= set(stats[name])
+        assert stats[name]["maxsize"] == learned.CACHE_CONFIGS
+        assert stats[name]["builds"] >= stats[name]["currsize"]

@@ -125,6 +125,7 @@ def test_padded_solve_matches_exact_flow():
         assert gap <= 0.02
 
 
+@pytest.mark.slow
 def test_solve_many_matches_single_solves():
     rng = np.random.default_rng(11)
     insts = [_random_instance(rng) for _ in range(12)]

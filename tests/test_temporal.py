@@ -293,6 +293,7 @@ def nominal_cells():
                          "waterwise-oracle")}
 
 
+@pytest.mark.slow
 def test_forecast_shifting_savings_ordering(nominal_cells):
     """On the nominal 0.2-day cell (delay-tolerant regime, TOL=3.0 so jobs
     have slack to shift), forecast-driven temporal shifting must reduce the
@@ -317,6 +318,7 @@ def test_forecast_shifting_savings_ordering(nominal_cells):
     assert 0.0 < fc["forecast_mape"] < 15.0
 
 
+@pytest.mark.slow
 def test_learned_forecaster_savings_ordering(nominal_cells):
     """Acceptance: the learned RG-LRU forecaster drops into the forecast
     pipeline via its spec (``forecaster=learned``) and preserves the
