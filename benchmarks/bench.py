@@ -31,7 +31,7 @@ import sys
 import time
 from typing import Callable, Dict, List, Optional, Tuple
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
 
 #: Ratio metrics the CI gate enforces (dotted paths into the document).
 #: Absolute walls are recorded for humans but never gated.
@@ -159,12 +159,28 @@ def bench_e2e(days: float = 0.05, seed: int = 3, reps: int = 3) -> Dict:
 
     eq = ([key(r) for r in r_jax["records"]]
           == [key(r) for r in r_fused["records"]])
+
+    # One extra obs-instrumented fused run — after the timed reps, so
+    # span bookkeeping never perturbs the gated walls — collects the
+    # per-round latency distribution (schema v2 fields).
+    import repro.obs as obs
+    from repro.core.solvers import jax_solver
+    with obs.capture(fold=False) as reg:
+        run("fused")
+        h = reg.hists.get("engine.round")
+        round_ms = (dict(rounds=h.count,
+                         p50=h.quantile(50) * 1e3,
+                         p95=h.quantile(95) * 1e3,
+                         p99=h.quantile(99) * 1e3) if h is not None else None)
     return dict(cell="diurnal[borg]", days=days, seed=seed,
                 jobs=len(jobs), unfinished=r_fused["unfinished"],
                 jax_wall_s=w_jax, fused_wall_s=w_fused,
                 jax_jobs_per_s=len(jobs) / w_jax,
                 fused_jobs_per_s=len(jobs) / w_fused,
-                fused_speedup=w_jax / w_fused, records_equal=bool(eq))
+                fused_speedup=w_jax / w_fused, records_equal=bool(eq),
+                round_latency_ms=round_ms,
+                sinkhorn_iters=jax_solver.SINKHORN_ITERS
+                * jax_solver.SINKHORN_STAGES)
 
 
 # ---------------------------------------------------------------------------
@@ -279,6 +295,12 @@ def to_text(doc: Dict) -> str:
               f"{e['fused_jobs_per_s']:.0f} jobs/s "
               f"({e['fused_speedup']:.2f}x), records_equal="
               f"{e['records_equal']}"]
+    rl = e.get("round_latency_ms")
+    if rl:
+        lines += [f"round latency (fused): p50 {rl['p50']:.1f}ms "
+                  f"p95 {rl['p95']:.1f}ms p99 {rl['p99']:.1f}ms over "
+                  f"{rl['rounds']} rounds "
+                  f"({e.get('sinkhorn_iters', '?')} sinkhorn iters/solve)"]
     f = doc["forecaster"]
     lines += [f"forecaster: fit {f['fit_wall_s']:.2f}s "
               f"({f['train_steps']} steps), infer "
@@ -317,7 +339,12 @@ def to_readme(doc: Dict) -> str:
         f"fit {fc['fit_wall_s']:.1f} s ({fc['train_steps']} steps), "
         f"re-condition + predict {fc['infer_wall_s'] * 1e3:.1f} ms, "
         f"{fc['train_retraces']} train / {fc['predict_retraces']} predict "
-        f"retrace(s).",
+        f"retrace(s)."
+        + (f" Fused round latency: p50 "
+           f"{e['round_latency_ms']['p50']:.0f} ms / p99 "
+           f"{e['round_latency_ms']['p99']:.0f} ms over "
+           f"{e['round_latency_ms']['rounds']} rounds."
+           if e.get("round_latency_ms") else ""),
         README_END]
     return "\n".join(lines)
 

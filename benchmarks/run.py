@@ -86,6 +86,25 @@ def build_plan(args):
                                       tuple(seeds) if seeds else (None,))
 
 
+def print_metrics_table(snap) -> None:
+    """Per-stage latency table from an obs metrics snapshot."""
+    from repro.obs import MetricsRegistry
+    reg = MetricsRegistry()
+    reg.merge(snap)
+    if reg.hists:
+        print("\n# per-stage latency (obs):")
+        print(f"# {'stage':24s} {'count':>7s} {'p50 ms':>10s} "
+              f"{'p95 ms':>10s} {'p99 ms':>10s}")
+        for name in sorted(reg.hists):
+            h = reg.hists[name]
+            print(f"# {name:24s} {h.count:7d} {h.quantile(50)*1e3:10.3f} "
+                  f"{h.quantile(95)*1e3:10.3f} {h.quantile(99)*1e3:10.3f}")
+    warn = {k: v for k, v in snap.get("counters", {}).items()
+            if k.startswith("warn/")}
+    for k, v in sorted(warn.items()):
+        print(f"# {k}: {v:.0f}")
+
+
 def run_sweep(args) -> None:
     from repro import experiments
 
@@ -104,11 +123,25 @@ def run_sweep(args) -> None:
         options["shards"] = args.shards
     if args.workers is not None:
         options["max_workers"] = args.workers
-    t0 = time.time()
-    rows = plan.run(executor=executor, strict=False, **options)
-    print(experiments.to_table(rows))
     out = os.path.join(os.path.dirname(__file__), "out")
     os.makedirs(out, exist_ok=True)
+    trace_path = None
+    if args.trace is not None:
+        trace_path = args.trace or os.path.join(out, "run.trace.jsonl")
+        if executor != "serial":
+            # Trace events are per-process: pool workers would be dark.
+            print(f"# --trace forces --executor serial (was [{executor}])")
+            executor, options = "serial", {}
+    collect = trace_path is not None or args.metrics
+    t0 = time.time()
+    if collect:
+        import repro.obs as obs
+        with obs.capture(trace_path=trace_path) as reg:
+            rows = plan.run(executor=executor, strict=False, **options)
+            snap = reg.snapshot()
+    else:
+        rows = plan.run(executor=executor, strict=False, **options)
+    print(experiments.to_table(rows))
     csv = os.path.join(out, "scenario_sweep.csv")
     experiments.to_csv(rows, csv)
     failed = [r for r in rows if r.get("error")]
@@ -118,6 +151,11 @@ def run_sweep(args) -> None:
           f"[{executor}] -> {csv}")
     for r in failed:
         print(f"# FAILED {r['scenario_spec']} × {r['spec']}: {r['error']}")
+    if collect:
+        print_metrics_table(snap)
+    if trace_path is not None:
+        print(f"# trace -> {trace_path} (load in https://ui.perfetto.dev "
+              f"or: PYTHONPATH=src python -m repro.obs.report {trace_path})")
 
 
 def main() -> None:
@@ -180,6 +218,16 @@ def main() -> None:
     ap.add_argument("--tolerance", type=float, default=None,
                     help="delay-tolerance override (TOL fraction of exec "
                          "time; the temporal-shifting slack dimension)")
+    ap.add_argument("--trace", nargs="?", const="", default=None,
+                    metavar="PATH",
+                    help="with --sweep: stream a Chrome-trace JSONL of the "
+                         "run (default benchmarks/out/run.trace.jsonl; load "
+                         "in Perfetto or render with `python -m "
+                         "repro.obs.report`); forces the serial executor")
+    ap.add_argument("--metrics", action="store_true",
+                    help="with --sweep: collect repro.obs metrics and print "
+                         "the per-stage p50/p95/p99 latency table after the "
+                         "run")
     ap.add_argument("--trace-csv", default="",
                     help="register a real-trace CSV as scenario 'csv-trace' "
                          "(canonical columns: job_id,submit_s,duration_s,"
@@ -207,6 +255,8 @@ def main() -> None:
                            workers=args.workers is not None,
                            tolerance=args.tolerance is not None,
                            trace_csv=args.trace_csv != "",
+                           trace=args.trace is not None,
+                           metrics=args.metrics,
                            jobs_per_day=args.jobs_per_day is not None)
         if any(sweep_flags.values()):
             ap.error("--" + ", --".join(k.replace("_", "-")
@@ -236,6 +286,8 @@ def main() -> None:
                       seed=args.seed != 0, workers=args.workers is not None,
                       tolerance=args.tolerance is not None,
                       trace_csv=args.trace_csv != "",
+                      trace=args.trace is not None,
+                      metrics=args.metrics,
                       shards=args.shards is not None,
                       seeds=args.seeds != "",
                       save_plan=args.save_plan != "",

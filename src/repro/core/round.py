@@ -59,13 +59,13 @@ the decisions they round to are pinned equal per dtype/shape bucket.
 from __future__ import annotations
 
 import functools
-import time
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+import repro.obs as obs
 from repro.core import footprint, solvers
 from repro.core.solvers import jax_solver
 from repro.core.solvers.jax_solver import BIG, _NEG, bucket_for
@@ -235,6 +235,14 @@ def fused_solve(cost: np.ndarray, allowed: np.ndarray, capacity: np.ndarray,
             soften=bool(soften), sigma=float(sigma), impl=impl,
             eps_min=float(eps_min), interpret=_interpret(impl, interpret))
         Cn, X = jax.device_get((Cn, X))
+        if obs.enabled():
+            bucket = M + 1 + pad
+            obs.annotate(
+                bucket=bucket, pad=pad, occupancy=(M + 1) / bucket,
+                sinkhorn_iters=jax_solver.SINKHORN_ITERS
+                * jax_solver.SINKHORN_STAGES,
+                eps0=jax_solver.SINKHORN_EPS0, eps_min=eps_min,
+                anneal_stages=jax_solver.SINKHORN_STAGES, impl=impl)
         c_eff, mask = jax_solver._effective(cost, allowed, soften, overrun,
                                             tol, sigma)
         res = jax_solver._finalize(np.asarray(X[:M], np.float64),
@@ -358,50 +366,56 @@ def fused_temporal_round(inst, now_s: float, ci, ewif, wue, pue, wsf,
     bucket, _ = _pad_rows(M)
     impl = sinkhorn_impl or sinkhorn_impl_default()
 
-    t0 = time.perf_counter()
-    # One zero-initialized padded blob, filled in place: padding rows fall
-    # out as zero-mass (validity 0) rows and the whole round uploads as two
-    # contiguous copies (blob + rattrs).
-    W = 4 + 3 * S * N + 2 * N
-    blob = np.zeros((bucket - 1, W), np.float32)
-    for i, j in enumerate(jobs):
-        blob[i, 0] = j.energy_kwh
-        blob[i, 1] = j.exec_time_s
-        blob[i, 2] = j.slack_budget_s(now_s)
-        blob[i, 3] = 1.0
-    # slot-major [ci | ewif | wue] per slot — [S, 3R] blocks flattened
-    blob[:M, 4:4 + 3 * S * N] = np.concatenate(
-        [ci, ewif, wue], axis=2).reshape(M, 3 * S * N)
-    blob[:M, 4 + 3 * S * N:4 + 3 * S * N + N] = inst.latency
-    blob[:M, 4 + 3 * S * N + N:] = inst.allowed
-    rattrs = np.stack([pue, wsf, ref_row, cap]).astype(np.float32)
-    out = _temporal_program(
-        jnp.asarray(blob), jnp.asarray(rattrs),
-        offsets=tuple(float(o) for o in slot_offsets),
-        lam_co2=float(lam_co2), lam_h2o=float(lam_h2o),
-        defer_eps=float(defer_eps), guard_s=float(guard_s),
-        lifetime_s=float(server.lifetime_s),
-        embodied_gco2=float(server.embodied_gco2),
-        embodied_water_l=float(server.embodied_water_l),
-        want_plan=bool(want_plan), impl=impl, eps_min=float(eps_min),
-        interpret=_interpret(impl, interpret))
-    out = jax.device_get(out)
-    Cn = np.asarray(out[0][:M], np.float64)
-    X = np.asarray(out[1][:M], np.float64)
-    scale = float(out[2])
-    mask = Cn < BIG * 0.5          # forbidden arcs are exactly BIG
-    # De-normalized costs price the objective; identical to the priced
-    # tensor on every allowed arc (forbidden arcs never enter objectives).
-    c_eff = np.where(mask, Cn * scale, solvers.BIG)
-    cap_t = np.tile(cap, S)
+    with obs.timed("solver.fused_round", jobs=M, slots=S, regions=N,
+                  bucket=bucket, occupancy=(M + 1) / bucket,
+                  sinkhorn_iters=jax_solver.SINKHORN_ITERS
+                  * jax_solver.SINKHORN_STAGES,
+                  eps0=jax_solver.SINKHORN_EPS0, eps_min=eps_min,
+                  anneal_stages=jax_solver.SINKHORN_STAGES, impl=impl) as t:
+        # One zero-initialized padded blob, filled in place: padding rows fall
+        # out as zero-mass (validity 0) rows and the whole round uploads as two
+        # contiguous copies (blob + rattrs).
+        W = 4 + 3 * S * N + 2 * N
+        blob = np.zeros((bucket - 1, W), np.float32)
+        for i, j in enumerate(jobs):
+            blob[i, 0] = j.energy_kwh
+            blob[i, 1] = j.exec_time_s
+            blob[i, 2] = j.slack_budget_s(now_s)
+            blob[i, 3] = 1.0
+        # slot-major [ci | ewif | wue] per slot — [S, 3R] blocks flattened
+        blob[:M, 4:4 + 3 * S * N] = np.concatenate(
+            [ci, ewif, wue], axis=2).reshape(M, 3 * S * N)
+        blob[:M, 4 + 3 * S * N:4 + 3 * S * N + N] = inst.latency
+        blob[:M, 4 + 3 * S * N + N:] = inst.allowed
+        rattrs = np.stack([pue, wsf, ref_row, cap]).astype(np.float32)
+        out = _temporal_program(
+            jnp.asarray(blob), jnp.asarray(rattrs),
+            offsets=tuple(float(o) for o in slot_offsets),
+            lam_co2=float(lam_co2), lam_h2o=float(lam_h2o),
+            defer_eps=float(defer_eps), guard_s=float(guard_s),
+            lifetime_s=float(server.lifetime_s),
+            embodied_gco2=float(server.embodied_gco2),
+            embodied_water_l=float(server.embodied_water_l),
+            want_plan=bool(want_plan), impl=impl, eps_min=float(eps_min),
+            interpret=_interpret(impl, interpret))
+        out = jax.device_get(out)
+        Cn = np.asarray(out[0][:M], np.float64)
+        X = np.asarray(out[1][:M], np.float64)
+        scale = float(out[2])
+        mask = Cn < BIG * 0.5          # forbidden arcs are exactly BIG
+        # De-normalized costs price the objective; identical to the priced
+        # tensor on every allowed arc (forbidden arcs never enter objectives).
+        c_eff = np.where(mask, Cn * scale, solvers.BIG)
+        cap_t = np.tile(cap, S)
 
-    if int(cap_t.sum()) < M or not mask.any(axis=1).all():
-        res = _infeasible(M)
-    else:
-        res = jax_solver._finalize(X, Cn, c_eff, mask, cap_t,
-                                   False, None, None)
-        res.backend = "fused"
-    res.solve_time_s = time.perf_counter() - t0
+        if int(cap_t.sum()) < M or not mask.any(axis=1).all():
+            res = _infeasible(M)
+        else:
+            res = jax_solver._finalize(X, Cn, c_eff, mask, cap_t,
+                                       False, None, None)
+            res.backend = "fused"
+        t.set(status=res.status)
+    res.solve_time_s = t.elapsed_s
     if want_plan:
         cost = np.asarray(out[3][:M], np.float64)
         allowed = np.asarray(out[4][:M], bool)

@@ -27,10 +27,11 @@ All backends consume a cost matrix + arc filter + capacities and return a
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Callable, Dict, Optional
 
 import numpy as np
+
+import repro.obs as obs
 
 BIG = 1e6  # cost assigned to structurally-forbidden arcs in dense backends
 
@@ -62,10 +63,16 @@ def soft_cost(cost: np.ndarray, allowed: np.ndarray, overrun: np.ndarray,
     return cost + sigma * excess
 
 
-def _timed(fn: Callable[[], SolveResult]) -> SolveResult:
-    t0 = time.perf_counter()
-    res = fn()
-    res.solve_time_s = time.perf_counter() - t0
+def _timed(fn: Callable[[], SolveResult],
+           name: str = "solver.solve") -> SolveResult:
+    """Time one backend solve via an obs span. ``solve_time_s`` is the
+    span's wall time — identical semantics (one perf_counter pair) to
+    the old inline timing whether obs is enabled or not."""
+    with obs.timed(name) as t:
+        res = fn()
+        obs.annotate(backend=res.backend, status=res.status,
+                     jobs=int(res.assign.shape[0]))
+    res.solve_time_s = t.elapsed_s
     return res
 
 

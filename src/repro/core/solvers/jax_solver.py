@@ -23,13 +23,13 @@ the TPU-native equivalent of the paper's branch-and-cut (DESIGN.md §4).
 from __future__ import annotations
 
 import functools
-import time
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+import repro.obs as obs
 from repro.core import solvers
 
 BIG = 1e4          # forbidden-arc cost after normalization to ~unit scale
@@ -41,6 +41,13 @@ _NEG = -1e9        # log-domain mask value / zero-mass row marginal
 # the solver once per bucket instead of once per distinct M.
 BUCKETS = (4, 8, 16, 32, 64, 128, 256, 512, 1024, 2048, 4096)
 
+# The annealed-Sinkhorn schedule baked into ``sinkhorn_log``'s defaults;
+# solver spans annotate these so traces record the effective iteration
+# budget (iters × anneal_stages) per solve.
+SINKHORN_EPS0 = 0.5
+SINKHORN_ITERS = 60
+SINKHORN_STAGES = 6
+
 
 def bucket_for(rows: int) -> int:
     """Smallest bucket ≥ rows (next power of two beyond the table)."""
@@ -50,6 +57,10 @@ def bucket_for(rows: int) -> int:
     b = BUCKETS[-1]
     while b < rows:
         b *= 2
+    obs.warn("solver.bucket_overflow",
+             f"instance with {rows} rows exceeds the largest padded bucket "
+             f"{BUCKETS[-1]}; falling back to ad-hoc bucket {b} "
+             f"(fresh JIT compile per new size)")
     return b
 
 
@@ -273,6 +284,15 @@ def solve(cost: np.ndarray, allowed: np.ndarray, capacity: np.ndarray, *,
         f, g, eps = sinkhorn_log(jnp.asarray(C), jnp.asarray(log_a),
                                  jnp.asarray(log_b), eps_min=eps_min)
         X = np.asarray(plan_from_duals(jnp.asarray(C), f, g, eps))[:M]
+        if obs.enabled():
+            # row-marginal residual: each real row targets mass 1/Σcap
+            total = max(float(cap.sum()), 1e-9)
+            residual = float(np.abs(X.sum(axis=1) * total - 1.0).max())
+            obs.annotate(bucket=rows + pad, pad=pad,
+                         occupancy=rows / (rows + pad),
+                         sinkhorn_iters=SINKHORN_ITERS * SINKHORN_STAGES,
+                         eps0=SINKHORN_EPS0, eps_min=eps_min,
+                         anneal_stages=SINKHORN_STAGES, residual=residual)
         return _finalize(X, Cn, c_eff, mask, cap, soften, overrun, tol)
     return solvers._timed(run)
 
@@ -294,35 +314,37 @@ def solve_many(costs, alloweds, capacities, *, soften: bool = False,
     tols = tols if tols is not None else [None] * K
     results: list = [None] * K
     groups: dict = {}
-    t0 = time.perf_counter()
-    for k in range(K):
-        cost = np.asarray(costs[k], np.float64)
-        allowed = np.asarray(alloweds[k], bool)
-        cap = np.asarray(capacities[k]).astype(np.int64)
-        M, N = cost.shape
-        c_eff, mask = _effective(cost, allowed, soften, overruns[k], tols[k],
-                                 sigma)
-        if int(cap.sum()) < M or not mask.any(axis=1).all():
-            results[k] = _infeasible(M)
-            continue
-        rows = M + 1
-        pad = bucket_for(rows) - rows
-        C, log_a, log_b, Cn = _prepare(c_eff, mask, cap, pad)
-        groups.setdefault((bucket_for(rows), N), []).append(
-            (k, C, log_a, log_b, Cn, c_eff, mask, cap))
-    for (_, _), items in groups.items():
-        Cb = jnp.asarray(np.stack([it[1] for it in items]))
-        la = jnp.asarray(np.stack([it[2] for it in items]))
-        lb = jnp.asarray(np.stack([it[3] for it in items]))
-        fb, gb, eps = sinkhorn_log_batched(Cb, la, lb, eps_min=eps_min)
-        plans = np.asarray(jnp.exp(
-            (fb[:, :, None] + gb[:, None, :] - Cb) / eps[:, None, None]))
-        for it, X in zip(items, plans):
-            k, _, _, _, Cn, c_eff, mask, cap = it
-            M = Cn.shape[0]
-            results[k] = _finalize(X[:M], Cn, c_eff, mask, cap, soften,
-                                   overruns[k], tols[k])
-    per = (time.perf_counter() - t0) / max(K, 1)
+    with obs.timed("solver.solve_many", K=K) as t:
+        for k in range(K):
+            cost = np.asarray(costs[k], np.float64)
+            allowed = np.asarray(alloweds[k], bool)
+            cap = np.asarray(capacities[k]).astype(np.int64)
+            M, N = cost.shape
+            c_eff, mask = _effective(cost, allowed, soften, overruns[k],
+                                     tols[k], sigma)
+            if int(cap.sum()) < M or not mask.any(axis=1).all():
+                results[k] = _infeasible(M)
+                continue
+            rows = M + 1
+            pad = bucket_for(rows) - rows
+            C, log_a, log_b, Cn = _prepare(c_eff, mask, cap, pad)
+            groups.setdefault((bucket_for(rows), N), []).append(
+                (k, C, log_a, log_b, Cn, c_eff, mask, cap))
+        for (_, _), items in groups.items():
+            Cb = jnp.asarray(np.stack([it[1] for it in items]))
+            la = jnp.asarray(np.stack([it[2] for it in items]))
+            lb = jnp.asarray(np.stack([it[3] for it in items]))
+            fb, gb, eps = sinkhorn_log_batched(Cb, la, lb, eps_min=eps_min)
+            plans = np.asarray(jnp.exp(
+                (fb[:, :, None] + gb[:, None, :] - Cb) / eps[:, None, None]))
+            for it, X in zip(items, plans):
+                k, _, _, _, Cn, c_eff, mask, cap = it
+                M = Cn.shape[0]
+                results[k] = _finalize(X[:M], Cn, c_eff, mask, cap, soften,
+                                       overruns[k], tols[k])
+        t.set(buckets=len(groups),
+              sinkhorn_iters=SINKHORN_ITERS * SINKHORN_STAGES)
+    per = t.elapsed_s / max(K, 1)
     for r in results:
         r.solve_time_s = per
     return results

@@ -27,6 +27,7 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+import repro.obs as obs
 from repro.core import footprint
 
 HOUR = 3600.0
@@ -433,5 +434,8 @@ def generate(days: int = 10, seed: int = 0, ewif_table: str = "macknick",
     if degenerate.any():
         bw_sub[degenerate] = float(WAN_BW_GBPS[WAN_BW_GBPS > 0].mean())
         rtt_sub[degenerate] = float(WAN_RTT_S[WAN_RTT_S > 0].mean())
+        obs.warn("telemetry.degenerate_wan",
+                 f"{int(degenerate.sum())} region-pair WAN cells had no "
+                 "bandwidth entry; patched to the fleet-typical link")
     return Telemetry(ci=ci, ewif=ewif, wue=wue, wsf=wsf, pue=pue, hours=hours,
                      wb_c=wb, bw_gbps=bw_sub, rtt_s=rtt_sub)

@@ -26,6 +26,7 @@ import concurrent.futures
 import os
 from typing import Dict, List, Optional, Union
 
+import repro.obs as obs
 from repro.experiments import runner
 from repro.experiments.plan import Cell
 from repro.spec import (Param, parse_raw, params_from_signature,
@@ -74,11 +75,16 @@ class ProcessExecutor(Executor):
         if workers <= 1 or len(cells) <= 1:
             return SerialExecutor().run(cells)
         rows: List[Dict] = []
+        fn = runner.run_cell_obs if obs.enabled() else runner.run_cell
         with concurrent.futures.ProcessPoolExecutor(workers) as pool:
-            futs = [pool.submit(runner.run_cell, c) for c in cells]
+            futs = [pool.submit(fn, c) for c in cells]
             for cell, fut in zip(cells, futs):
                 try:
-                    rows.append(fut.result())
+                    row = fut.result()
+                    snap = row.pop("_obs", None)
+                    if snap:
+                        obs.merge(snap)
+                    rows.append(row)
                 except Exception as e:      # noqa: BLE001 — error-row contract
                     rows.append(runner.error_row(cell, e))
         return rows

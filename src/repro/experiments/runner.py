@@ -7,11 +7,11 @@ reuses :func:`execute` / :func:`finalize_row` around its slice machinery.
 """
 from __future__ import annotations
 
-import time
 from typing import Dict, List, Optional
 
 import numpy as np
 
+import repro.obs as obs
 from repro import policy
 from repro.experiments.plan import Cell
 from repro.experiments.scenario import build_instance
@@ -111,10 +111,10 @@ def execute(cell: Cell, extra_build_kwargs: Optional[Dict] = None):
     sim = EventSimulator(inst.tele, inst.capacity,
                          SimConfig(window_s=cellkw["window_s"]),
                          capacity_events=inst.capacity_events)
-    t0 = time.perf_counter()
-    result = sim.run(inst.jobs, sched)
-    wall = time.perf_counter() - t0
-    return inst, spec, sched, result, wall
+    with obs.timed("cell.run", scenario=cell.scenario.name,
+                   scheduler=spec.name, jobs=len(inst.jobs)) as t:
+        result = sim.run(inst.jobs, sched)
+    return inst, spec, sched, result, t.elapsed_s
 
 
 def run_cell(cell: Cell, extra_build_kwargs: Optional[Dict] = None,
@@ -125,3 +125,15 @@ def run_cell(cell: Cell, extra_build_kwargs: Optional[Dict] = None,
     return finalize_row(cell, spec, inst, result, wall,
                         stats=forecast_stats(sched, len(inst.jobs)),
                         return_result=return_result)
+
+
+def run_cell_obs(cell: Cell) -> Dict:
+    """``run_cell`` with obs collection enabled inside the worker process
+    (``repro.obs`` registries are per-process, so a fresh pool worker is
+    otherwise dark). Ships the worker's metrics snapshot in the private
+    ``_obs`` row key — popped and merged into the driver registry by
+    ``ProcessExecutor``; ``to_csv``'s fixed column set never sees it."""
+    with obs.capture(fold=False) as reg:
+        row = run_cell(cell)
+        row["_obs"] = reg.snapshot()
+    return row

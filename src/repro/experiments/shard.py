@@ -42,12 +42,13 @@ value, not guaranteed to the last bit — float association differs).
 from __future__ import annotations
 
 import concurrent.futures
+import contextlib
 import os
-import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+import repro.obs as obs
 from repro import policy
 from repro.experiments.plan import Cell
 from repro.experiments.runner import (execute, finalize_row, forecast_stats,
@@ -159,7 +160,7 @@ def _slice_stats(res: Dict, entry: Optional[EngineState],
 
 
 def _run_shard(cell: Cell, spec_str: str, boundaries: Sequence[float],
-               handoff_s: float, k: int) -> Dict:
+               handoff_s: float, k: int, collect_obs: bool = False) -> Dict:
     """Run shard ``k`` of a cell speculatively: (warm-up →) slice.
 
     Rebuilds the scenario instance deterministically from the cell's specs
@@ -169,6 +170,12 @@ def _run_shard(cell: Cell, spec_str: str, boundaries: Sequence[float],
     ``spec_str`` is the driver's fully *resolved* policy spec (scenario
     forecast-error injection applied), so every worker builds exactly the
     scheduler the row's ``spec`` column claims.
+
+    ``collect_obs`` ships the slice run's metrics snapshot in the ``obs``
+    key (``repro.obs`` registries are per-process — the driver merges the
+    snapshots of *accepted* shards, so merged metrics cover exactly the
+    work the merged row reports). Warm-up metrics are isolated and
+    discarded: speculation is an implementation detail, not row work.
     """
     inst, cellkw = build_instance(cell.resolved_scenario())
     w = float(cellkw["window_s"])
@@ -186,13 +193,24 @@ def _run_shard(cell: Cell, spec_str: str, boundaries: Sequence[float],
         s_k = _grid_at(t0, w, max(b - handoff_s, t0))
         warm = [j for j in jobs if s_k <= j.submit_time_s < b]
         seed = _empty_seed(s_k, inst.capacity, inst.capacity_events)
-        entry = sim.run(warm, sched, state=seed, stop_at=b,
-                        export_state=True, hold_grid=True)["state"]
-    res = sim.run(sl, sched, state=entry, stop_at=stop,
-                  export_state=stop is not None)
+        iso = (obs.capture(fold=False) if collect_obs
+               else contextlib.nullcontext())
+        with iso:
+            entry = sim.run(warm, sched, state=seed, stop_at=b,
+                            export_state=True, hold_grid=True)["state"]
+    shard_obs: Optional[Dict] = None
+    if collect_obs:
+        with obs.capture(fold=False) as reg:
+            res = sim.run(sl, sched, state=entry, stop_at=stop,
+                          export_state=stop is not None)
+            shard_obs = reg.snapshot()
+    else:
+        res = sim.run(sl, sched, state=entry, stop_at=stop,
+                      export_state=stop is not None)
     out = _slice_stats(res, entry)
     out.update(k=k, entry=entry, exit=res.get("state"),
-               stats=forecast_stats(sched, len(sl)), n_jobs=len(sl))
+               stats=forecast_stats(sched, len(sl)), n_jobs=len(sl),
+               obs=shard_obs)
     return out
 
 
@@ -268,92 +286,102 @@ def run_sharded_cell(cell: Cell, *, shards: int = 2,
     ``auto_handoff_s`` window. The row is bit-identical to the serial
     executor's for carbon/water/violation totals on every path.
     """
-    t_start = time.perf_counter()
-    inst, cellkw = build_instance(cell.resolved_scenario())
-    w = float(cellkw["window_s"])
-    jobs = sorted(inst.jobs, key=lambda j: j.submit_time_s)
-    boundaries = pick_shard_boundaries(jobs, shards)
-    spec = resolve_policy_spec(cell, inst)
-    entry = policy.get_policy(spec.name)
-    if not boundaries:                      # degenerate: nothing to split
-        inst, spec, sched, result, wall = execute(cell)
-        return finalize_row(cell, spec, inst, result, wall,
-                            stats=forecast_stats(sched, len(inst.jobs)))
-    if handoff_s <= 0.0:
-        handoff_s = auto_handoff_s(jobs)
-    slices = slice_by_arrival(jobs, boundaries)
-    sim_cfg = SimConfig(window_s=w)
+    with obs.timed("cell.run_sharded", shards=shards) as t:
+        inst, cellkw = build_instance(cell.resolved_scenario())
+        w = float(cellkw["window_s"])
+        jobs = sorted(inst.jobs, key=lambda j: j.submit_time_s)
+        boundaries = pick_shard_boundaries(jobs, shards)
+        spec = resolve_policy_spec(cell, inst)
+        entry = policy.get_policy(spec.name)
+        if not boundaries:                      # degenerate: nothing to split
+            inst, spec, sched, result, wall = execute(cell)
+            return finalize_row(cell, spec, inst, result, wall,
+                                stats=forecast_stats(sched, len(inst.jobs)))
+        if handoff_s <= 0.0:
+            handoff_s = auto_handoff_s(jobs)
+        slices = slice_by_arrival(jobs, boundaries)
+        sim_cfg = SimConfig(window_s=w)
 
-    def _rerun(k: int, state: Optional[EngineState]) -> Dict:
-        """Sequential exact run of slice ``k`` from the true state."""
-        sched = policy.build(spec, inst.tele)
-        sim = EventSimulator(inst.tele, inst.capacity, sim_cfg,
-                             capacity_events=inst.capacity_events)
-        stop = boundaries[k] if k < len(boundaries) else None
-        res = sim.run(slices[k], sched, state=state, stop_at=stop,
-                      export_state=stop is not None)
-        out = _slice_stats(res, None, keep_records=True)
-        # A resumed run's rounds/integrals continue the imported state's
-        # cumulative values; the fresh scheduler's solve_times don't —
-        # subtract only where the chain carried over.
-        if state is not None:
-            out["rounds"] = res["rounds"] - state.rounds
-            out["busy_integral_s"] = (res["busy_integral_s"]
-                                      - state.cluster["busy_integral_s"])
-        out.update(k=k, entry=state, exit=res.get("state"),
-                   stats=forecast_stats(sched, len(slices[k])),
-                   n_jobs=len(slices[k]))
-        return out
-
-    accepted: List[Dict]
-    if entry.stateless:
-        n = len(slices)
-        workers = max_workers or min(os.cpu_count() or 1, n)
-        if workers > 1:
-            with concurrent.futures.ProcessPoolExecutor(workers) as pool:
-                futs = [pool.submit(_run_shard, cell, str(spec), boundaries,
-                                    handoff_s, k) for k in range(n)]
-                outs = [f.result() for f in futs]
-        else:
-            outs = [_run_shard(cell, str(spec), boundaries, handoff_s, k)
-                    for k in range(n)]
-        accepted = [outs[0]]
-        true_exit = outs[0]["exit"]
-        for k in range(1, n):
-            if states_match(true_exit, outs[k]["entry"]):
-                accepted.append(outs[k])
-            else:                           # speculation missed: exact redo
-                accepted.append(_rerun(k, true_exit))
-            true_exit = accepted[-1]["exit"]
-    else:
-        # Stateful policy: exact chained handoff with one scheduler
-        # instance carried across every slice (sequential by nature). The
-        # engine's carried state keeps its counters and utilization
-        # integrals *cumulative*, so the final slice's result already
-        # reports whole-run values bit-identical to the serial path —
-        # only the per-slice record streams need concatenating.
-        sched = policy.build(spec, inst.tele)
-        sim = EventSimulator(inst.tele, inst.capacity, sim_cfg,
-                             capacity_events=inst.capacity_events)
-        records, frames = [], []
-        state: Optional[EngineState] = None
-        res: Dict = {}
-        for k, sl in enumerate(slices):
+        def _rerun(k: int, state: Optional[EngineState]) -> Dict:
+            """Sequential exact run of slice ``k`` from the true state."""
+            sched = policy.build(spec, inst.tele)
+            sim = EventSimulator(inst.tele, inst.capacity, sim_cfg,
+                                 capacity_events=inst.capacity_events)
             stop = boundaries[k] if k < len(boundaries) else None
-            res = sim.run(sl, sched, state=state, stop_at=stop,
+            res = sim.run(slices[k], sched, state=state, stop_at=stop,
                           export_state=stop is not None)
-            state = res.get("state")
-            records.extend(res["records"])
-            frames.append(res["frame"])
-        result = dict(res, records=records,
-                      frame={key: np.concatenate([f[key] for f in frames])
-                             for key in frames[0]})
-        result.pop("state", None)
-        stats = forecast_stats(sched, len(jobs))
-        wall = time.perf_counter() - t_start
-        return finalize_row(cell, spec, inst, result, wall, stats=stats)
+            out = _slice_stats(res, None, keep_records=True)
+            # A resumed run's rounds/integrals continue the imported state's
+            # cumulative values; the fresh scheduler's solve_times don't —
+            # subtract only where the chain carried over.
+            if state is not None:
+                out["rounds"] = res["rounds"] - state.rounds
+                out["busy_integral_s"] = (res["busy_integral_s"]
+                                          - state.cluster["busy_integral_s"])
+            out.update(k=k, entry=state, exit=res.get("state"),
+                       stats=forecast_stats(sched, len(slices[k])),
+                       n_jobs=len(slices[k]))
+            return out
 
-    stats = merge_forecast_stats([p.get("stats") for p in accepted])
-    result = _merge_results(accepted, inst)
-    wall = time.perf_counter() - t_start
-    return finalize_row(cell, spec, inst, result, wall, stats=stats)
+        accepted: List[Dict]
+        collect = obs.enabled()
+        if entry.stateless:
+            n = len(slices)
+            workers = max_workers or min(os.cpu_count() or 1, n)
+            if workers > 1:
+                with concurrent.futures.ProcessPoolExecutor(workers) as pool:
+                    futs = [pool.submit(_run_shard, cell, str(spec), boundaries,
+                                        handoff_s, k, collect)
+                            for k in range(n)]
+                    outs = [f.result() for f in futs]
+            else:
+                outs = [_run_shard(cell, str(spec), boundaries, handoff_s, k,
+                                   collect) for k in range(n)]
+            accepted = [outs[0]]
+            true_exit = outs[0]["exit"]
+            for k in range(1, n):
+                if states_match(true_exit, outs[k]["entry"]):
+                    accepted.append(outs[k])
+                else:                           # speculation missed: exact redo
+                    obs.counter("shard/speculation_miss")
+                    accepted.append(_rerun(k, true_exit))
+                true_exit = accepted[-1]["exit"]
+            if collect:
+                # Fold the accepted shards' shipped metrics into the
+                # driver registry (re-runs recorded live in-driver and
+                # ship no snapshot; rejected speculations are dropped).
+                for p in accepted:
+                    if p.get("obs"):
+                        obs.merge(p["obs"])
+        else:
+            # Stateful policy: exact chained handoff with one scheduler
+            # instance carried across every slice (sequential by nature). The
+            # engine's carried state keeps its counters and utilization
+            # integrals *cumulative*, so the final slice's result already
+            # reports whole-run values bit-identical to the serial path —
+            # only the per-slice record streams need concatenating.
+            sched = policy.build(spec, inst.tele)
+            sim = EventSimulator(inst.tele, inst.capacity, sim_cfg,
+                                 capacity_events=inst.capacity_events)
+            records, frames = [], []
+            state: Optional[EngineState] = None
+            res: Dict = {}
+            for k, sl in enumerate(slices):
+                stop = boundaries[k] if k < len(boundaries) else None
+                res = sim.run(sl, sched, state=state, stop_at=stop,
+                              export_state=stop is not None)
+                state = res.get("state")
+                records.extend(res["records"])
+                frames.append(res["frame"])
+            result = dict(res, records=records,
+                          frame={key: np.concatenate([f[key] for f in frames])
+                                 for key in frames[0]})
+            result.pop("state", None)
+            stats = forecast_stats(sched, len(jobs))
+            return finalize_row(cell, spec, inst, result, t.elapsed(),
+                                stats=stats)
+
+        stats = merge_forecast_stats([p.get("stats") for p in accepted])
+        result = _merge_results(accepted, inst)
+        return finalize_row(cell, spec, inst, result, t.elapsed(),
+                            stats=stats)

@@ -42,13 +42,14 @@ from __future__ import annotations
 import functools
 import json
 import os
-import time
 from typing import Optional
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
+
+import repro.obs as obs
 
 from repro.checkpoint import store
 from repro.forecast import base
@@ -164,7 +165,9 @@ CACHE_CONFIGS = 32
 #: Factory-build counters: each build is one fresh set of jit compilations
 #: (a cache miss OR a re-build after LRU eviction), so ``builds − misses``
 #: counts evictions and ``builds`` counts retraces. Read via
-#: :func:`cache_stats` (the perf harness reports these).
+#: :func:`cache_stats` (the perf harness reports these); every build also
+#: bumps the shared ``jit/builds/*`` counters in ``repro.obs``, so traced
+#: runs fold retrace accounting into the same snapshot as everything else.
 _BUILDS = {"train_step": 0, "predict_fn": 0}
 
 
@@ -188,6 +191,7 @@ def _train_step(horizon: int, period: int, scan_impl: str, lr: float,
     """(optimizer, jitted step) — cached per config so refits and multiple
     forecaster instances share one compiled executable per batch shape."""
     _BUILDS["train_step"] += 1
+    obs.counter("jit/builds/train_step")
     opt = _adamw(
         lr=cosine_schedule(lr, max(train_steps // 10, 1),
                            max(train_steps, 1)),
@@ -212,6 +216,7 @@ def _predict_fn(horizon: int, period: int, scan_impl: str):
     """Jitted batched (per-column) inference, compiled once per padded
     [columns, window] shape."""
     _BUILDS["predict_fn"] += 1
+    obs.counter("jit/builds/predict_fn")
     @jax.jit
     def run(params, xw):
         return _quantiles_from_windows(params, xw, horizon, period,
@@ -310,6 +315,10 @@ class LearnedForecaster(base.Forecaster):
                       and y.shape[1] != self._mu.shape[0])
         if self._params is None or wrong_cols:
             if not can_train:
+                obs.warn("forecast.fallback_seasonal_naive",
+                         f"history of {self._T} hours is below the "
+                         f"{self.window + self.horizon + 4}-hour training "
+                         "minimum; serving seasonal-naive instead")
                 self._fallback = base.SeasonalNaive(self.period).fit(y)
                 return self
             self._train(y)
@@ -330,7 +339,14 @@ class LearnedForecaster(base.Forecaster):
     # -- training ------------------------------------------------------------
 
     def _train(self, y: np.ndarray) -> None:
-        t0 = time.perf_counter()
+        with obs.timed("forecast.fit", hours=int(y.shape[0]),
+                       columns=int(y.shape[1]),
+                       train_steps=self.train_steps) as t:
+            self._train_impl(y)
+            t.set(loss=self.last_loss)
+        self.train_seconds += t.elapsed_s
+
+    def _train_impl(self, y: np.ndarray) -> None:
         self._mu = y.mean(axis=0)
         self._sd = np.maximum(y.std(axis=0), 1e-9)
         z = (y - self._mu) / self._sd                           # [T, C]
@@ -383,22 +399,22 @@ class LearnedForecaster(base.Forecaster):
         self.last_loss = float(loss)
         self._fits_since_train = 0
         self.train_count += 1
-        self.train_seconds += time.perf_counter() - t0
 
     # -- conditioning + prediction -------------------------------------------
 
     def _condition(self, y: np.ndarray) -> None:
         """Run the (jitted, column-batched) inference pass on the tail
         window; caches the denormalized [H, C, Q] quantile tensor."""
-        z = (y[-self.window:] - self._mu) / self._sd
-        xw = np.ascontiguousarray(z.T)                          # [C, L]
-        C = xw.shape[0]
-        Cp = -(-C // COLUMN_BUCKET) * COLUMN_BUCKET
-        if Cp > C:
-            xw = np.vstack([xw, np.zeros((Cp - C, self.window))])
-        run = _predict_fn(self.horizon, self.period, self.scan_impl)
-        q = np.asarray(run(self._params, jnp.asarray(xw, jnp.float32)),
-                       np.float64)[:C]                          # [C, H, Q]
+        with obs.span("forecast.infer", columns=int(y.shape[1])):
+            z = (y[-self.window:] - self._mu) / self._sd
+            xw = np.ascontiguousarray(z.T)                      # [C, L]
+            C = xw.shape[0]
+            Cp = -(-C // COLUMN_BUCKET) * COLUMN_BUCKET
+            if Cp > C:
+                xw = np.vstack([xw, np.zeros((Cp - C, self.window))])
+            run = _predict_fn(self.horizon, self.period, self.scan_impl)
+            q = np.asarray(run(self._params, jnp.asarray(xw, jnp.float32)),
+                           np.float64)[:C]                      # [C, H, Q]
         q = np.sort(q, axis=-1)        # enforce q10 ≤ q50 ≤ q90 pointwise
         q = q.transpose(1, 0, 2)                                # [H, C, Q]
         self._q = q * self._sd[None, :, None] + self._mu[None, :, None]

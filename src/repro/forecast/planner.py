@@ -25,6 +25,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+import repro.obs as obs
 from repro.core import footprint
 from repro.core.problem import Job, ProblemInstance
 
@@ -201,7 +202,9 @@ class DeferralQueue:
 
     def _release(self, h: _Held, now_s: float, pop: bool = True) -> None:
         self.released += 1
-        self.total_defer_s += max(now_s - h.held_at_s, 0.0)
+        hold_s = max(now_s - h.held_at_s, 0.0)
+        self.total_defer_s += hold_s
+        obs.observe("deferral.hold_s", hold_s)   # simulated-time duration
         if pop:
             del self._held[h.job.job_id]
 

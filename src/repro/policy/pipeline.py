@@ -34,6 +34,7 @@ from typing import List, Optional, Protocol, Sequence, Tuple, runtime_checkable
 
 import numpy as np
 
+import repro.obs as obs
 from repro.core import footprint, problem, slack, solvers, telemetry
 
 
@@ -388,9 +389,10 @@ class ForecastPricer(Pricer):
 
     def price(self, jobs, now_s, inst, snap) -> PricedPlan:
         pipe = self.pipe
-        self._refresh_forecast(now_s)
-        offsets = np.arange(self.horizon_slots) * self.slot_s
-        ci, ewif, wue = self._slot_signal_tensors(jobs, now_s, offsets)
+        with obs.span("policy.forecast"):
+            self._refresh_forecast(now_s)
+            offsets = np.arange(self.horizon_slots) * self.slot_s
+            ci, ewif, wue = self._slot_signal_tensors(jobs, now_s, offsets)
         if pipe.backend == "fused":
             # Pricing, masking, Sinkhorn, and extraction run as ONE jitted
             # program; the plan comes back already hard-solved (bit-identical
@@ -574,77 +576,89 @@ class PolicyPipeline:
         if not jobs:
             return Decision([], np.zeros(0, np.int64), [], None, False)
 
-        due, held = self.deferral.admit(jobs, now_s)
-        if not due:
-            return Decision([], np.zeros(0, np.int64), held, None, False,
-                            wake_s=self.deferral.wake_s())
+        with obs.span("policy.admit", pending=len(jobs)):
+            due, held = self.deferral.admit(jobs, now_s)
+            if not due:
+                return Decision([], np.zeros(0, np.int64), held, None, False,
+                                wake_s=self.deferral.wake_s())
 
-        total_cap = int(capacity.sum())
-        deferred: List[problem.Job] = []
-        if len(due) > total_cap:                             # lines 5-7
-            due, deferred = slack.pick_most_urgent(
-                due, now_s, total_cap, bw_gbps=self.tele.wan_bw_gbps,
-                rtt_s=self.tele.wan_rtt_s)
-        if not due:
-            return Decision([], np.zeros(0, np.int64), deferred + held, None,
-                            False, wake_s=self.deferral.wake_s())
+            total_cap = int(capacity.sum())
+            deferred: List[problem.Job] = []
+            if len(due) > total_cap:                         # lines 5-7
+                due, deferred = slack.pick_most_urgent(
+                    due, now_s, total_cap, bw_gbps=self.tele.wan_bw_gbps,
+                    rtt_s=self.tele.wan_rtt_s)
+            if not due:
+                return Decision([], np.zeros(0, np.int64), deferred + held,
+                                None, False, wake_s=self.deferral.wake_s())
 
-        snap = self.tele.at(now_s)
-        self.history.observe(snap)
-        inst = problem.build(due, self.tele, now_s, capacity, self.server,
-                             snap=snap)
-        tol = np.array([j.tolerance for j in due])
-        plan = self.pricer.price(due, now_s, inst, snap)
+        with obs.span("policy.build", jobs=len(due)):
+            snap = self.tele.at(now_s)
+            self.history.observe(snap)
+            inst = problem.build(due, self.tele, now_s, capacity, self.server,
+                                 snap=snap)
+            tol = np.array([j.tolerance for j in due])
+        with obs.span("policy.price", jobs=len(due)):
+            plan = self.pricer.price(due, now_s, inst, snap)
 
         softened = False
-        if plan.presolved is not None:
-            res = plan.presolved
-        else:
-            res = solvers.solve(plan.cost, plan.allowed, plan.capacity,
-                                backend=self.backend, soften=False,
-                                overrun=plan.overrun, tol=tol,
-                                sigma=self.sigma)
-        if res.feasible:
-            self._record(plan.cost, plan.allowed, plan.capacity,
-                         plan.overrun, tol, False)
-        else:                                                # lines 10-11
-            # Soft fallback is slot-0 only: a job that must overrun its
-            # tolerance should pay the Eq 12-13 penalty and run *now*, not
-            # hide in a future slot or behind the defer arc.
-            softened = True
-            cost0 = plan.base_cost
-            if cost0 is None:
-                cost0 = inst.objective_matrix(self.lam_co2, self.lam_h2o,
-                                              self.lam_ref,
-                                              self.history.co2_ref,
-                                              self.history.h2o_ref)
-            res = solvers.solve(cost0, inst.allowed, capacity,
-                                backend=self.backend, soften=True,
-                                overrun=inst.overrun, tol=tol,
-                                sigma=self.sigma)
-            self._record(cost0, inst.allowed, capacity, inst.overrun, tol,
-                         True)
+        with obs.span("policy.solve", jobs=len(due),
+                      presolved=plan.presolved is not None):
+            if plan.presolved is not None:
+                res = plan.presolved
+            else:
+                res = solvers.solve(plan.cost, plan.allowed, plan.capacity,
+                                    backend=self.backend, soften=False,
+                                    overrun=plan.overrun, tol=tol,
+                                    sigma=self.sigma)
+            if res.feasible:
+                self._record(plan.cost, plan.allowed, plan.capacity,
+                             plan.overrun, tol, False)
+            else:                                            # lines 10-11
+                # Soft fallback is slot-0 only: a job that must overrun its
+                # tolerance should pay the Eq 12-13 penalty and run *now*,
+                # not hide in a future slot or behind the defer arc.
+                softened = True
+                cost0 = plan.base_cost
+                if cost0 is None:
+                    cost0 = inst.objective_matrix(self.lam_co2, self.lam_h2o,
+                                                  self.lam_ref,
+                                                  self.history.co2_ref,
+                                                  self.history.h2o_ref)
+                res = solvers.solve(cost0, inst.allowed, capacity,
+                                    backend=self.backend, soften=True,
+                                    overrun=inst.overrun, tol=tol,
+                                    sigma=self.sigma)
+                self._record(cost0, inst.allowed, capacity, inst.overrun,
+                             tol, True)
+            obs.annotate(softened=softened, status=res.status)
         self.solve_times.append(res.solve_time_s)
 
         scheduled: List[problem.Job] = []
         assign: List[int] = []
-        for j, col in zip(due, res.assign):
-            col = int(col)
-            if col < 0:
-                deferred.append(j)
-                continue
-            action, payload = ((RUN, col) if softened
-                               else self.pricer.decode(plan, col, now_s))
-            if action == RUN:
-                j.region = int(payload)
-                scheduled.append(j)
-                assign.append(int(payload))
-            elif action == HOLD:
-                self.deferral.hold(j, float(payload), now_s)
-                deferred.append(j)
-            else:                                            # DEFER
-                deferred.append(j)
-        deferred += held
+        with obs.span("policy.extract", jobs=len(due)):
+            for j, col in zip(due, res.assign):
+                col = int(col)
+                if col < 0:
+                    deferred.append(j)
+                    continue
+                action, payload = ((RUN, col) if softened
+                                   else self.pricer.decode(plan, col, now_s))
+                if action == RUN:
+                    j.region = int(payload)
+                    scheduled.append(j)
+                    assign.append(int(payload))
+                elif action == HOLD:
+                    self.deferral.hold(j, float(payload), now_s)
+                    deferred.append(j)
+                else:                                        # DEFER
+                    deferred.append(j)
+            deferred += held
+        if obs.enabled():
+            q = getattr(getattr(self.deferral, "queue", None), "__len__",
+                        None)
+            if q is not None:
+                obs.gauge("deferral.queue_depth", float(q()))
         return Decision(scheduled, np.asarray(assign, np.int64), deferred,
                         res, softened, wake_s=self.deferral.wake_s())
 

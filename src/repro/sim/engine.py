@@ -43,6 +43,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+import repro.obs as obs
 from repro.core import footprint, telemetry
 from repro.core.problem import Job
 from repro.sim.cluster import Cluster
@@ -208,6 +209,40 @@ class EventSimulator:
                    for (job, nn, s, f), c, w in zip(placed, carbon, water)]
         return records, frame
 
+    # -- trace series --------------------------------------------------------
+
+    def _emit_series(self, tr, frame: Dict[str, np.ndarray],
+                     horizon: float) -> None:
+        """Retroactive simulated-time counter tracks: hourly per-region
+        carbon/water (accounted footprints bucketed by start hour) plus the
+        WUE truth series — rendered by ``repro.obs.report`` and shown on
+        their own Perfetto track (``pid = obs.SIM_PID``, sim-hours as the
+        time axis)."""
+        H = int(np.ceil(horizon / telemetry.HOUR))
+        if H <= 0 or not len(frame["start_s"]):
+            return
+        R = self.tele.num_regions
+        hr = np.minimum((frame["start_s"] // telemetry.HOUR).astype(np.int64),
+                        H - 1)
+        region = frame["region"].astype(np.int64)
+        carbon = np.zeros((H, R))
+        water = np.zeros((H, R))
+        np.add.at(carbon, (hr, region), frame["carbon_g"])
+        np.add.at(water, (hr, region), frame["water_l"])
+        labels = [f"R{j}" for j in range(R)]
+        for h in range(H):
+            ts = h * telemetry.HOUR * 1e6
+            wue = self.tele.at(h * telemetry.HOUR)["wue"]
+            tr.counter("sim/carbon_g",
+                       {lb: float(v) for lb, v in zip(labels, carbon[h])},
+                       ts_us=ts, pid=obs.SIM_PID)
+            tr.counter("sim/water_L",
+                       {lb: float(v) for lb, v in zip(labels, water[h])},
+                       ts_us=ts, pid=obs.SIM_PID)
+            tr.counter("sim/wue",
+                       {lb: float(v) for lb, v in zip(labels, wue)},
+                       ts_us=ts, pid=obs.SIM_PID)
+
     # -- main loop -----------------------------------------------------------
 
     def run(self, jobs: Sequence[Job], scheduler, *,
@@ -272,21 +307,31 @@ class EventSimulator:
                 i += 1
             progressed = False
             if pending:
-                dec = scheduler.schedule(pending, now, cluster.free())
-                progressed = bool(dec.scheduled)
-                for job, n in zip(dec.scheduled, dec.assign):
-                    n = int(n)
-                    lat = self.tele.transfer_latency_s(job.package_bytes,
-                                                       job.home_region, n)
-                    start = now + lat
-                    if job.planned_start_s is not None:
-                        start = max(start, job.planned_start_s)
-                    finish = start + job.exec_time_s * job.time_scale
-                    cluster.dispatch(n, finish)
-                    job.start_time_s, job.finish_time_s = start, finish
-                    placed.append((job, n, start, finish))
-                pending = list(dec.deferred)
-                rounds += 1
+                with obs.span("engine.round", now_s=now,
+                              pending=len(pending)) as sp:
+                    dec = scheduler.schedule(pending, now, cluster.free())
+                    progressed = bool(dec.scheduled)
+                    for job, n in zip(dec.scheduled, dec.assign):
+                        n = int(n)
+                        lat = self.tele.transfer_latency_s(job.package_bytes,
+                                                           job.home_region, n)
+                        start = now + lat
+                        if job.planned_start_s is not None:
+                            start = max(start, job.planned_start_s)
+                        finish = start + job.exec_time_s * job.time_scale
+                        cluster.dispatch(n, finish)
+                        job.start_time_s, job.finish_time_s = start, finish
+                        placed.append((job, n, start, finish))
+                    sp.set(scheduled=len(dec.scheduled),
+                           deferred=len(dec.deferred))
+                    pending = list(dec.deferred)
+                    rounds += 1
+                if obs.enabled():
+                    tr = obs.tracer()
+                    if tr is not None:
+                        tr.counter("engine/queue", {
+                            "pending": len(pending),
+                            "scheduled": len(dec.scheduled)})
             # Deadlock guard: pending jobs that no scheduler round can place
             # and no running job will ever release capacity for. A future
             # capacity event may still unblock them (outage restoration), and
@@ -358,6 +403,11 @@ class EventSimulator:
         cluster.advance(now)
         horizon = max(now, cluster.drain_time(), 1.0)
         records, frame = self._account_all(placed)
+        if obs.enabled():
+            obs.observe("engine.pending_depth", float(len(pending)))
+            tr = obs.tracer()
+            if tr is not None:
+                self._emit_series(tr, frame, horizon)
         result = dict(records=records, frame=frame,
                       windows=prior_rounds + rounds,
                       rounds=prior_rounds + rounds,

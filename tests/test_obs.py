@@ -1,0 +1,295 @@
+"""Observability layer: exact histogram quantiles, associative snapshot
+merge, span nesting in the exported Chrome trace, warning counters on the
+degenerate paths, the report CLI, and the disabled-mode pin (obs off and
+obs on produce bit-identical engine records)."""
+import json
+import warnings
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import repro.obs as obs
+from repro.obs.metrics import (HIST_BASE, Histogram, MetricsRegistry,
+                               bucket_bounds, bucket_index, merge_snapshots)
+
+
+# ---------------------------------------------------------------------------
+# histogram quantiles
+# ---------------------------------------------------------------------------
+
+def test_quantiles_exact_vs_numpy():
+    rng = np.random.default_rng(0)
+    vals = rng.lognormal(mean=-3.0, sigma=2.0, size=997)
+    h = Histogram()
+    for v in vals:
+        h.observe(v)
+    for q in (0, 10, 50, 90, 95, 99, 100):
+        assert h.quantile(q) == pytest.approx(np.percentile(vals, q),
+                                              rel=0, abs=1e-12)
+    assert h.count == len(vals)
+    assert h.mean == pytest.approx(vals.mean())
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.floats(min_value=1e-9, max_value=1e6,
+                          allow_nan=False, allow_infinity=False),
+                min_size=1, max_size=300),
+       st.floats(min_value=0.0, max_value=100.0))
+def test_quantiles_exact_property(vals, q):
+    h = Histogram()
+    for v in vals:
+        h.observe(v)
+    assert h.quantile(q) == pytest.approx(np.percentile(vals, q),
+                                          rel=1e-12, abs=1e-15)
+
+
+def test_quantile_bounded_error_after_overflow():
+    """Once the sample buffer drops, bucket quantiles stay within the
+    bucket base's relative error of the exact answer."""
+    rng = np.random.default_rng(1)
+    vals = rng.lognormal(mean=0.0, sigma=1.5, size=2000)
+    h = Histogram(max_samples=100)           # force overflow
+    for v in vals:
+        h.observe(v)
+    assert h.samples is None
+    for q in (50, 95, 99):
+        exact = np.percentile(vals, q)
+        assert h.quantile(q) == pytest.approx(exact, rel=HIST_BASE - 1.0)
+
+
+def test_bucket_geometry():
+    for v in (1e-6, 0.37, 1.0, 42.0):
+        lo, hi = bucket_bounds(bucket_index(v))
+        assert lo < v <= hi or v <= lo  # <=: values clamp at the tiny floor
+    assert bucket_index(0.0) == bucket_index(-5.0)   # non-positive clamps
+
+
+# ---------------------------------------------------------------------------
+# snapshot / merge
+# ---------------------------------------------------------------------------
+
+def _registry_with(vals, counters=(), gauges=()):
+    r = MetricsRegistry()
+    for v in vals:
+        r.observe("lat", v)
+    for name, n in counters:
+        r.counter(name, n)
+    for name, v, w in gauges:
+        r.gauge(name, v, w)
+    return r
+
+
+def test_merge_is_associative():
+    rng = np.random.default_rng(2)
+    parts = [rng.lognormal(size=40) for _ in range(3)]
+    snaps = [_registry_with(p, counters=[("n", len(p))],
+                            gauges=[("g", p.mean(), len(p))]).snapshot()
+             for p in parts]
+    ab_c = merge_snapshots([merge_snapshots(snaps[:2]), snaps[2]])
+    a_bc = merge_snapshots([snaps[0], merge_snapshots(snaps[1:])])
+    assert ab_c["counters"] == a_bc["counters"]
+    assert ab_c["gauges"]["g"]["weight"] == a_bc["gauges"]["g"]["weight"]
+    assert ab_c["gauges"]["g"]["value"] == pytest.approx(
+        a_bc["gauges"]["g"]["value"])
+    ha, hb = ab_c["hists"]["lat"], a_bc["hists"]["lat"]
+    assert ha["counts"] == hb["counts"] and ha["count"] == hb["count"]
+    assert sorted(ha["samples"]) == sorted(hb["samples"])
+
+
+def test_merged_quantile_equals_pooled():
+    rng = np.random.default_rng(3)
+    parts = [rng.lognormal(size=50) for _ in range(4)]
+    merged = merge_snapshots(
+        [_registry_with(p).snapshot() for p in parts])
+    reg = MetricsRegistry()
+    reg.merge(merged)
+    pooled = np.concatenate(parts)
+    assert reg.hists["lat"].quantile(95) == pytest.approx(
+        np.percentile(pooled, 95), abs=1e-12)
+
+
+def test_gauge_merge_is_weighted_mean():
+    reg = MetricsRegistry()
+    reg.gauge("depth", 10.0, weight=1.0)
+    reg.merge({"gauges": {"depth": {"value": 40.0, "weight": 3.0}},
+               "counters": {}, "hists": {}})
+    g = reg.gauges["depth"]
+    assert g.weight == 4.0
+    assert g.value == pytest.approx((10.0 * 1 + 40.0 * 3) / 4)
+
+
+def test_snapshot_is_json_round_trippable():
+    snap = _registry_with([0.1, 0.2], counters=[("c", 2)],
+                          gauges=[("g", 1.0, 1.0)]).snapshot()
+    reg = MetricsRegistry()
+    reg.merge(json.loads(json.dumps(snap)))
+    assert reg.hists["lat"].count == 2
+    assert reg.counters["c"].value == 2
+
+
+# ---------------------------------------------------------------------------
+# spans and the exported trace
+# ---------------------------------------------------------------------------
+
+def test_span_nesting_in_exported_trace(tmp_path):
+    path = tmp_path / "t.trace.jsonl"
+    with obs.capture(trace_path=str(path)):
+        with obs.span("outer", kind="round"):
+            with obs.span("inner.a"):
+                obs.annotate(jobs=3)
+            with obs.span("inner.b"):
+                pass
+    events = obs.read_trace(str(path))
+    assert obs.validate_events(events) == []
+    spans = {e["name"]: e for e in events if e["ph"] == "X"}
+    assert set(spans) == {"outer", "inner.a", "inner.b"}
+    out, a, b = spans["outer"], spans["inner.a"], spans["inner.b"]
+    # containment: children inside the parent interval, a before b
+    assert out["ts"] <= a["ts"] and a["ts"] + a["dur"] <= out["ts"] + out["dur"]
+    assert out["ts"] <= b["ts"] and b["ts"] + b["dur"] <= out["ts"] + out["dur"]
+    assert a["ts"] + a["dur"] <= b["ts"]
+    assert a["args"]["jobs"] == 3            # annotate hit the open span
+    assert out["args"]["kind"] == "round"
+
+
+def test_span_observes_histogram():
+    with obs.capture() as reg:
+        with obs.span("stage"):
+            pass
+        with obs.span("stage"):
+            pass
+        assert reg.hists["stage"].count == 2
+
+
+def test_timed_measures_when_disabled():
+    assert not obs.enabled()
+    with obs.timed("anything") as t:
+        sum(range(1000))
+    assert t.elapsed_s > 0.0
+    assert "anything" not in obs.registry().hists   # no metric recorded
+
+
+def test_disabled_span_is_shared_noop():
+    assert not obs.enabled()
+    s1, s2 = obs.span("a"), obs.span("b", x=1)
+    assert s1 is s2                          # the whole disabled-mode cost
+
+
+def test_capture_restores_and_folds():
+    obs.reset()
+    with obs.capture():
+        obs.observe("inner", 1.0)
+    assert not obs.enabled()
+    assert obs.registry().hists["inner"].count == 1   # folded out
+    with obs.capture(fold=False):
+        obs.observe("dropped", 1.0)
+    assert "dropped" not in obs.registry().hists
+    obs.reset()
+
+
+# ---------------------------------------------------------------------------
+# warning counters on the degenerate paths
+# ---------------------------------------------------------------------------
+
+def test_bucket_overflow_warn_counter():
+    from repro.core.solvers import jax_solver
+    obs.reset()
+    before = obs.counter_value("warn/solver.bucket_overflow")
+    with pytest.warns(RuntimeWarning, match="padded bucket"):
+        warnings.simplefilter("always")
+        b = jax_solver.bucket_for(jax_solver.BUCKETS[-1] + 1)
+    assert b >= jax_solver.BUCKETS[-1] + 1
+    assert obs.counter_value("warn/solver.bucket_overflow") == before + 1
+
+
+def test_forecaster_fallback_warn_counter():
+    from repro.forecast import make_forecaster
+    obs.reset()
+    f = make_forecaster("learned", train_steps=2, seed=0)
+    with pytest.warns(RuntimeWarning, match="seasonal-naive"):
+        warnings.simplefilter("always")
+        f.fit(np.abs(np.random.default_rng(0).normal(size=(6, 3))) + 1.0)
+    assert obs.counter_value("warn/forecast.fallback_seasonal_naive") >= 1
+
+
+def test_degenerate_wan_warn_counter(monkeypatch):
+    from repro.core import telemetry
+    bw = telemetry.WAN_BW_GBPS.copy()
+    bw[0, 1] = bw[1, 0] = 0.0                # knock out one WAN link
+    monkeypatch.setattr(telemetry, "WAN_BW_GBPS", bw)
+    obs.reset()
+    with pytest.warns(RuntimeWarning, match="WAN"):
+        warnings.simplefilter("always")
+        tele = telemetry.generate(days=1, seed=0)
+    assert obs.counter_value("warn/telemetry.degenerate_wan") >= 1
+    assert (tele.bw_gbps[0, 1] > 0.0).all()  # patched, not left at zero
+
+
+# ---------------------------------------------------------------------------
+# disabled-mode pin: obs on vs off is bit-identical engine output
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_records_bit_identical_obs_on_vs_off(tmp_path):
+    from repro.experiments.plan import Cell
+    from repro.experiments.runner import run_cell
+    from repro.experiments.scenario import parse_scenario
+    from repro import policy
+
+    cell = Cell(parse_scenario("diurnal[days=0.05,jobs_per_day=2000]"),
+                policy.as_spec("waterwise[backend=jax]"), 0)
+    assert not obs.enabled()
+    off = run_cell(cell, return_result=True)
+    with obs.capture(trace_path=str(tmp_path / "cell.trace.jsonl")):
+        on = run_cell(cell, return_result=True)
+
+    def key(r):
+        return (r.job.job_id, r.region, r.start_s, r.finish_s,
+                r.carbon_g, r.water_l)
+
+    assert [key(r) for r in off["_result"]["records"]] \
+        == [key(r) for r in on["_result"]["records"]]
+    for col in ("carbon_kg", "water_kl", "violation_pct", "utilization"):
+        assert off[col] == on[col]
+
+
+# ---------------------------------------------------------------------------
+# report CLI
+# ---------------------------------------------------------------------------
+
+def _tiny_trace(path):
+    with obs.capture(trace_path=str(path)):
+        for i in range(6):
+            with obs.span("solver.solve", sinkhorn_iters=360,
+                          residual=1e-5 * (i + 1)):
+                sum(range(200))
+        tr = obs.tracer()
+        tr.counter("sim/carbon_g", {"R0": 10.0 * (1 + 0)}, ts_us=0.0,
+                   pid=obs.SIM_PID)
+        tr.counter("sim/carbon_g", {"R0": 20.0}, ts_us=3.6e9,
+                   pid=obs.SIM_PID)
+
+
+def test_report_cli_smoke(tmp_path, capsys):
+    from repro.obs import report
+    a, b = tmp_path / "a.jsonl", tmp_path / "b.jsonl"
+    _tiny_trace(a)
+    _tiny_trace(b)
+    assert report.main([str(a)]) == 0
+    out = capsys.readouterr().out
+    assert "solver.solve" in out and "p99_ms" in out
+    assert "360" in out                       # sinkhorn iters column
+    assert report.main([str(a), "--validate"]) == 0
+    assert "schema OK" in capsys.readouterr().out
+    assert report.main(["--diff", str(a), str(b)]) == 0
+    out = capsys.readouterr().out
+    assert "solver.solve" in out and "Δp99" in out
+
+
+def test_report_rejects_bad_schema(tmp_path):
+    bad = tmp_path / "bad.jsonl"
+    bad.write_text('[\n{"name": "x", "ph": "Q", "ts": 0},\n')
+    from repro.obs import report
+    assert report.main([str(bad), "--validate"]) == 1
