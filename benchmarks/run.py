@@ -31,6 +31,14 @@ oracle lower-bounds every model):
   PYTHONPATH=src python -m benchmarks.run --forecast-bench \\
       --days 10 --train-steps 600 --signal wue
 
+Streaming-service benchmark (the persisted BENCH_8 harness — batch/stream
+parity, Sinkhorn warm-start carry, receding-horizon re-planning deltas, and
+a Poisson-burst storm through the bounded admission loop):
+
+  PYTHONPATH=src python -m benchmarks.run --serve
+  PYTHONPATH=src python -m benchmarks.serve_bench --quick \\
+      --check BENCH_8.json                               # the CI gate
+
 Registries (names, accepted params, descriptions):
 
   PYTHONPATH=src python -m benchmarks.run --list-schedulers  [--markdown]
@@ -196,6 +204,11 @@ def main() -> None:
     ap.add_argument("--forecast-bench", action="store_true",
                     help="run the forecast-quality benchmark (walk-forward "
                          "MAPE/pinball/coverage per registered forecaster)")
+    ap.add_argument("--serve", action="store_true",
+                    help="run the streaming-service bench (batch parity, "
+                         "Sinkhorn warm-start, receding-horizon re-planning, "
+                         "Poisson-burst storm; `python -m "
+                         "benchmarks.serve_bench` for --out/--check/--quick)")
     ap.add_argument("--signal", default="ci",
                     help="with --forecast-bench: telemetry signal to "
                          "forecast (ci / ewif / wue / water_intensity)")
@@ -243,6 +256,9 @@ def main() -> None:
     if args.list_forecasters:
         list_forecasters(args.markdown)
         return
+    if args.serve:
+        from benchmarks import serve_bench
+        raise SystemExit(serve_bench.main([]))
     if args.forecast_bench:
         sweep_flags = dict(sweep=args.sweep, scenarios=args.scenarios != "",
                            schedulers=args.schedulers

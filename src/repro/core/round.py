@@ -58,6 +58,7 @@ the decisions they round to are pinned equal per dtype/shape bucket.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Optional
 
@@ -70,7 +71,8 @@ from repro.core import footprint, solvers
 from repro.core.solvers import jax_solver
 from repro.core.solvers.jax_solver import BIG, _NEG, bucket_for
 
-__all__ = ["fused_solve", "fused_temporal_round", "sinkhorn_impl_default"]
+__all__ = ["fused_solve", "fused_temporal_round", "sinkhorn_impl_default",
+           "SinkhornWarmStart"]
 
 
 def sinkhorn_impl_default() -> str:
@@ -263,37 +265,14 @@ def _infeasible(M: int) -> solvers.SolveResult:
 # Program 2: the fused temporal round (pricing + masking + solve)
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=(
-    "offsets", "lam_co2", "lam_h2o", "defer_eps", "guard_s", "lifetime_s",
-    "embodied_gco2", "embodied_water_l", "want_plan", "impl", "eps0",
-    "eps_min", "iters", "anneal_stages", "interpret"))
-def _temporal_program(blob, rattrs, *,
-                      offsets: tuple, lam_co2: float, lam_h2o: float,
-                      defer_eps: float, guard_s: float, lifetime_s: float,
-                      embodied_gco2: float, embodied_water_l: float,
-                      want_plan: bool, impl: str,
-                      eps0: float = 0.5, eps_min: float = 0.005,
-                      iters: int = 60, anneal_stages: int = 6,
-                      interpret: bool = False):
-    """The whole forecast-driven round on device: Eq 1/5 footprint pricing
-    over the (jobs × slots × regions) grid, Eq-7 normalization, the λ-mixed
-    Eq-8 objective + per-slot deferral ramp, the Eq-11 deadline/guard
-    feasibility mask, and the fused prepare/Sinkhorn/extraction.
-
-    Mirrors ``forecast.planner.build_temporal_plan`` exactly (the parity
-    tests pin the decisions); ``core.footprint`` is pure arithmetic, so the
-    same Eq 1-6 implementations trace unchanged.
-
-    Packed inputs (host→device copies, not semantics) — everything that
-    varies per round rides in TWO arrays, so a round costs two host→device
-    copies total:
-      blob    [Mb, 4 + 3SR + 2R]  per-job columns:
-                [E | exec_t | slack budget | row-validity    (4)
-                 | ci, ewif, wue forecast rows, slot-major   (3SR)
-                 | latency | slot-0 Eq-11 mask (0/1)         (2R)]
-      rattrs  [4, R]              pue | wsf | λ_ref history row | capacity
-    Per-pipeline constants are static: compiled straight into the program.
-    """
+def _price_temporal(blob, rattrs, *, offsets: tuple, lam_co2: float,
+                    lam_h2o: float, defer_eps: float, guard_s: float,
+                    lifetime_s: float, embodied_gco2: float,
+                    embodied_water_l: float):
+    """Traced pricing + masking of the (jobs × slots × regions) grid —
+    the device half shared by the fixed-budget and warm-startable temporal
+    programs. Returns ``(cost, mask, cap_t, valid)`` flattened to
+    ``[Mb, S·R]`` columns."""
     Mb = blob.shape[0]
     S = len(offsets)
     R = rattrs.shape[1]
@@ -325,6 +304,44 @@ def _temporal_program(blob, rattrs, *,
     cost = obj.reshape(Mb, S * R)
     mask = valid[:, None] & allowed.reshape(Mb, S * R)
     cap_t = jnp.tile(cap, S)
+    return cost, mask, cap_t, valid
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "offsets", "lam_co2", "lam_h2o", "defer_eps", "guard_s", "lifetime_s",
+    "embodied_gco2", "embodied_water_l", "want_plan", "impl", "eps0",
+    "eps_min", "iters", "anneal_stages", "interpret"))
+def _temporal_program(blob, rattrs, *,
+                      offsets: tuple, lam_co2: float, lam_h2o: float,
+                      defer_eps: float, guard_s: float, lifetime_s: float,
+                      embodied_gco2: float, embodied_water_l: float,
+                      want_plan: bool, impl: str,
+                      eps0: float = 0.5, eps_min: float = 0.005,
+                      iters: int = 60, anneal_stages: int = 6,
+                      interpret: bool = False):
+    """The whole forecast-driven round on device: Eq 1/5 footprint pricing
+    over the (jobs × slots × regions) grid, Eq-7 normalization, the λ-mixed
+    Eq-8 objective + per-slot deferral ramp, the Eq-11 deadline/guard
+    feasibility mask, and the fused prepare/Sinkhorn/extraction.
+
+    Mirrors ``forecast.planner.build_temporal_plan`` exactly (the parity
+    tests pin the decisions); ``core.footprint`` is pure arithmetic, so the
+    same Eq 1-6 implementations trace unchanged.
+
+    Packed inputs (host→device copies, not semantics) — everything that
+    varies per round rides in TWO arrays, so a round costs two host→device
+    copies total:
+      blob    [Mb, 4 + 3SR + 2R]  per-job columns:
+                [E | exec_t | slack budget | row-validity    (4)
+                 | ci, ewif, wue forecast rows, slot-major   (3SR)
+                 | latency | slot-0 Eq-11 mask (0/1)         (2R)]
+      rattrs  [4, R]              pue | wsf | λ_ref history row | capacity
+    Per-pipeline constants are static: compiled straight into the program.
+    """
+    cost, mask, cap_t, valid = _price_temporal(
+        blob, rattrs, offsets=offsets, lam_co2=lam_co2, lam_h2o=lam_h2o,
+        defer_eps=defer_eps, guard_s=guard_s, lifetime_s=lifetime_s,
+        embodied_gco2=embodied_gco2, embodied_water_l=embodied_water_l)
     Cn, X, scale = _solve_core(cost, mask, cap_t, valid, impl=impl,
                                eps0=eps0, eps_min=eps_min, iters=iters,
                                anneal_stages=anneal_stages,
@@ -332,6 +349,68 @@ def _temporal_program(blob, rattrs, *,
     if want_plan:
         return Cn, X, scale, cost, mask
     return Cn, X, scale
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "offsets", "lam_co2", "lam_h2o", "defer_eps", "guard_s", "lifetime_s",
+    "embodied_gco2", "embodied_water_l", "eps0", "eps_min", "iters",
+    "anneal_stages"))
+def _temporal_adaptive_program(blob, rattrs, g0, tol, *,
+                               offsets: tuple, lam_co2: float,
+                               lam_h2o: float, defer_eps: float,
+                               guard_s: float, lifetime_s: float,
+                               embodied_gco2: float, embodied_water_l: float,
+                               eps0: float, eps_min: float, iters: int,
+                               anneal_stages: int):
+    """``_temporal_program`` with the adaptive warm-startable Sinkhorn
+    (convergence-exit ``while_loop``, XLA impl only): the caller supplies
+    initial column potentials ``g0`` ([S·R], zeros for a cold start) and
+    gets back the converged potentials plus the inner-iteration count —
+    the live-serving path that carries duals between consecutive rounds
+    (``SinkhornWarmStart``)."""
+    cost, mask, cap_t, valid = _price_temporal(
+        blob, rattrs, offsets=offsets, lam_co2=lam_co2, lam_h2o=lam_h2o,
+        defer_eps=defer_eps, guard_s=guard_s, lifetime_s=lifetime_s,
+        embodied_gco2=embodied_gco2, embodied_water_l=embodied_water_l)
+    C, log_a, log_b, Cn, scale = _prepare_device(cost, mask, cap_t, valid)
+    f, g, eps, used = jax_solver._sinkhorn_log_adaptive_impl(
+        C, log_a, log_b, g0, tol, eps0=eps0, eps_min=eps_min, iters=iters,
+        anneal_stages=anneal_stages)
+    X = jnp.exp((f[:, None] + g[None, :] - C) / eps)[:Cn.shape[0]]
+    X = X / jnp.maximum(X.sum(axis=1, keepdims=True), 1e-30)
+    return Cn, X, scale, g, used
+
+
+@dataclasses.dataclass
+class SinkhornWarmStart:
+    """Column-potential carry between consecutive fused temporal rounds.
+
+    The temporal OT's column space — (region, slot) cells — is fixed per
+    pipeline while the row space (jobs) changes every round, so the column
+    potentials ``g`` are the part of the duals worth carrying: passed as
+    the next round's ``g0``, a drifted-telemetry round converges in a
+    handful of final-ε iterations instead of the full annealed schedule.
+    The first round (or any column-shape change) runs cold: zeros init +
+    the full schedule. Cold and warm iteration counts are recorded via
+    ``repro.obs`` (``solver.sinkhorn_iters_cold`` / ``_warm``) and kept on
+    the object for reporting (``repro.serve`` folds them into the BENCH
+    round-latency fields).
+    """
+    tol: float = jax_solver.SINKHORN_TOL
+    g: Optional[np.ndarray] = None
+    cold_iters: list = dataclasses.field(default_factory=list)
+    warm_iters: list = dataclasses.field(default_factory=list)
+
+    def reset(self) -> None:
+        self.g = None
+
+    @property
+    def mean_cold_iters(self) -> float:
+        return float(np.mean(self.cold_iters)) if self.cold_iters else 0.0
+
+    @property
+    def mean_warm_iters(self) -> float:
+        return float(np.mean(self.warm_iters)) if self.warm_iters else 0.0
 
 
 def fused_temporal_round(inst, now_s: float, ci, ewif, wue, pue, wsf,
@@ -342,15 +421,24 @@ def fused_temporal_round(inst, now_s: float, ci, ewif, wue, pue, wsf,
                          want_plan: bool = False,
                          sinkhorn_impl: Optional[str] = None,
                          interpret: Optional[bool] = None,
-                         eps_min: float = 0.005):
+                         eps_min: float = 0.005,
+                         warm_start: Optional[SinkhornWarmStart] = None):
     """Price, mask, and solve one forecast round in a single device dispatch.
 
     Same signature family as ``forecast.planner.build_temporal_plan`` (the
     unfused path), plus the solve. Returns ``(cost, allowed, capacity,
-    SolveResult)``. The priced cost/mask tensors only leave the device when
-    ``want_plan`` is set (offline window recording) — the feasibility check,
-    rounding, and objective all run off the returned normalized costs, whose
-    forbidden arcs are exactly BIG — otherwise ``(None, None, ...)``.
+    SolveResult)``. With ``want_plan`` (offline window recording) the raw
+    priced tensors leave the device; otherwise the returned cost/allowed
+    are re-derived host-side from the normalized costs that come back
+    anyway (identical to the priced tensor on every allowed arc; forbidden
+    arcs carry ``solvers.BIG``) — no extra device transfer either way.
+
+    ``warm_start`` switches to the adaptive Sinkhorn (convergence-exit
+    loop, XLA impl): the object's carried column potentials seed the solve
+    — zeros + the full annealed schedule when empty (cold) — and the
+    converged potentials plus iteration counts are written back, so
+    consecutive calls with the same object warm-start each other
+    (the ``repro.serve`` decision loop's between-round carry).
     """
     jobs = inst.jobs
     M, N = inst.shape
@@ -388,17 +476,46 @@ def fused_temporal_round(inst, now_s: float, ci, ewif, wue, pue, wsf,
         blob[:M, 4 + 3 * S * N:4 + 3 * S * N + N] = inst.latency
         blob[:M, 4 + 3 * S * N + N:] = inst.allowed
         rattrs = np.stack([pue, wsf, ref_row, cap]).astype(np.float32)
-        out = _temporal_program(
-            jnp.asarray(blob), jnp.asarray(rattrs),
+        statics = dict(
             offsets=tuple(float(o) for o in slot_offsets),
             lam_co2=float(lam_co2), lam_h2o=float(lam_h2o),
             defer_eps=float(defer_eps), guard_s=float(guard_s),
             lifetime_s=float(server.lifetime_s),
             embodied_gco2=float(server.embodied_gco2),
-            embodied_water_l=float(server.embodied_water_l),
-            want_plan=bool(want_plan), impl=impl, eps_min=float(eps_min),
-            interpret=_interpret(impl, interpret))
-        out = jax.device_get(out)
+            embodied_water_l=float(server.embodied_water_l))
+        if warm_start is not None:
+            assert not want_plan, \
+                "warm_start and want_plan are mutually exclusive"
+            cols = S * N
+            cold = warm_start.g is None or warm_start.g.shape != (cols,)
+            g0 = (np.zeros(cols, np.float32) if cold
+                  else warm_start.g.astype(np.float32))
+            # Cold: the full annealed schedule with per-stage early exit.
+            # Warm: one final-ε stage from the carried potentials, with the
+            # whole fixed budget available as the iteration cap (the cap
+            # should never bind when the carry is any good).
+            budget = jax_solver.SINKHORN_ITERS * jax_solver.SINKHORN_STAGES
+            out = _temporal_adaptive_program(
+                jnp.asarray(blob), jnp.asarray(rattrs), jnp.asarray(g0),
+                jnp.float32(warm_start.tol), **statics,
+                eps0=float(eps_min) if not cold else jax_solver.SINKHORN_EPS0,
+                eps_min=float(eps_min),
+                iters=budget if not cold else jax_solver.SINKHORN_ITERS,
+                anneal_stages=1 if not cold else jax_solver.SINKHORN_STAGES)
+            out = jax.device_get(out)
+            warm_start.g = np.asarray(out[3], np.float32)
+            used = int(out[4])
+            (warm_start.cold_iters if cold
+             else warm_start.warm_iters).append(used)
+            obs.observe("solver.sinkhorn_iters_cold" if cold
+                        else "solver.sinkhorn_iters_warm", float(used))
+            t.set(warm=not cold, adaptive_iters=used)
+        else:
+            out = _temporal_program(
+                jnp.asarray(blob), jnp.asarray(rattrs), **statics,
+                want_plan=bool(want_plan), impl=impl, eps_min=float(eps_min),
+                interpret=_interpret(impl, interpret))
+            out = jax.device_get(out)
         Cn = np.asarray(out[0][:M], np.float64)
         X = np.asarray(out[1][:M], np.float64)
         scale = float(out[2])
@@ -420,4 +537,4 @@ def fused_temporal_round(inst, now_s: float, ci, ewif, wue, pue, wsf,
         cost = np.asarray(out[3][:M], np.float64)
         allowed = np.asarray(out[4][:M], bool)
         return cost, allowed, cap_t, res
-    return None, None, cap_t, res
+    return c_eff, mask, cap_t, res

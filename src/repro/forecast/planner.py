@@ -156,11 +156,30 @@ class DeferralQueue:
     def __contains__(self, job_id: int) -> bool:
         return job_id in self._held
 
-    def hold(self, job: Job, release_s: float, now_s: float) -> None:
+    def hold(self, job: Job, release_s: float, now_s: float,
+             held_at_s: Optional[float] = None) -> None:
+        """Hold ``job`` until ``release_s``. ``held_at_s`` backdates the
+        episode start — a re-planned job that gets held again continues its
+        original episode instead of opening a new one (receding-horizon
+        re-planning, ``policy.ReplanQueueDeferral``)."""
         assert job.job_id not in self._held
-        self._held[job.job_id] = _Held(job, release_s, now_s, self._seq)
+        start = now_s if held_at_s is None else held_at_s
+        self._held[job.job_id] = _Held(job, release_s, start, self._seq)
         self.unique_held.add(job.job_id)
         self._seq += 1
+
+    def pop_for_replan(self, job_id: int) -> float:
+        """Remove a held job so it can re-enter pricing *without* closing
+        its hold episode; returns the episode's start time. The caller
+        either re-holds it (``hold(..., held_at_s=start)`` — the episode
+        continues) or, if the re-plan ran it, closes the episode via
+        ``close_replan(start, ran_at_s)``."""
+        return self._held.pop(job_id).held_at_s
+
+    def close_replan(self, held_at_s: float, ran_at_s: float) -> None:
+        """Close the hold episode of a re-planned job that left the queue
+        (the re-pricing round chose to run it, or stopped holding it)."""
+        self._note_release(max(ran_at_s - held_at_s, 0.0))
 
     def next_release_s(self) -> Optional[float]:
         if not self._held:
@@ -201,12 +220,14 @@ class DeferralQueue:
         return [h.job for h in out]
 
     def _release(self, h: _Held, now_s: float, pop: bool = True) -> None:
-        self.released += 1
-        hold_s = max(now_s - h.held_at_s, 0.0)
-        self.total_defer_s += hold_s
-        obs.observe("deferral.hold_s", hold_s)   # simulated-time duration
+        self._note_release(max(now_s - h.held_at_s, 0.0))
         if pop:
             del self._held[h.job.job_id]
+
+    def _note_release(self, hold_s: float) -> None:
+        self.released += 1
+        self.total_defer_s += hold_s
+        obs.observe("deferral.hold_s", hold_s)   # simulated-time duration
 
     @property
     def mean_defer_s(self) -> float:

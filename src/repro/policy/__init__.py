@@ -24,8 +24,9 @@ from repro.policy.pipeline import (DEFER, HOLD, RUN, Decision, DeferralPolicy,
                                    ForecastPricer, HistoryLearner,
                                    NextRoundDeferral, PolicyPipeline,
                                    PricedPlan, Pricer, QueueDeferral,
-                                   Scheduler, SnapshotPricer,
-                                   forecast_pipeline, reactive_pipeline)
+                                   ReplanQueueDeferral, Scheduler,
+                                   SnapshotPricer, forecast_pipeline,
+                                   reactive_pipeline)
 from repro.policy.registry import (Param, PolicyEntry, as_spec, build,
                                    describe, get_policy, list_policies,
                                    parse, register_policy)
@@ -43,6 +44,6 @@ __all__ = [
     # pipeline
     "Decision", "Scheduler", "HistoryLearner", "PolicyPipeline", "Pricer",
     "PricedPlan", "SnapshotPricer", "ForecastPricer", "DeferralPolicy",
-    "NextRoundDeferral", "QueueDeferral", "reactive_pipeline",
-    "forecast_pipeline", "RUN", "HOLD", "DEFER",
+    "NextRoundDeferral", "QueueDeferral", "ReplanQueueDeferral",
+    "reactive_pipeline", "forecast_pipeline", "RUN", "HOLD", "DEFER",
 ]

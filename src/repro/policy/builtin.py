@@ -42,6 +42,14 @@ _HELP: Dict[str, str] = {
     "forecast_bias": "multiplicative forecast error injection (1.0 = off)",
     "forecast_noise": "relative forecast noise injection (0.0 = off)",
     "forecast_seed": "seed for the injected forecast noise",
+    "warm": "carry Sinkhorn potentials between rounds as warm starts "
+            "(fused backend only)",
+    "replan": "receding-horizon re-planning: held jobs re-enter pricing "
+              "every round instead of committing at admission",
+    "replan_guard_s": "commit window (s): held jobs this close to release "
+                      "are not re-planned",
+    "replan_margin": "hysteresis: a re-planned early run must beat the "
+                     "committed slot by this cost margin",
 }
 
 # Constructor arguments that are not spec-addressable (non-serializable or

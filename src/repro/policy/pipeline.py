@@ -245,7 +245,7 @@ class ForecastPricer(Pricer):
                  risk: float = 0.25, defer_eps: float = 1e-3,
                  guard_s: float = 240.0, warmup_hours: int = 96,
                  forecast_bias: float = 1.0, forecast_noise: float = 0.0,
-                 forecast_seed: int = 0):
+                 forecast_seed: int = 0, warm: bool = False):
         # ``forecaster`` names any registered model ("holtwinters",
         # "seasonal-naive", "persistence", "learned", ...) or "oracle".
         from repro import forecast as fcast
@@ -266,6 +266,12 @@ class ForecastPricer(Pricer):
         self.forecast_bias = float(forecast_bias)
         self.forecast_noise = float(forecast_noise)
         self.forecast_seed = int(forecast_seed)
+        # Warm-started Sinkhorn: carry the temporal OT's column potentials
+        # between rounds (``core.round.SinkhornWarmStart``). Fused backend
+        # only — the unfused path ignores it (warned once).
+        self.warm = bool(warm)
+        self.warm_state = None
+        self._warm_warned = False
         self._truth = None
         self._fit_hour = -1
         self._forecast = None
@@ -398,18 +404,26 @@ class ForecastPricer(Pricer):
             # program; the plan comes back already hard-solved (bit-identical
             # decisions to the unfused path — pinned in tests/test_round.py).
             from repro.core import round as fused_round
+            if self.warm and self.warm_state is None \
+                    and not pipe.record_windows:
+                self.warm_state = fused_round.SinkhornWarmStart()
             cost, allowed, cap, res = fused_round.fused_temporal_round(
                 inst, now_s, ci, ewif, wue, snap["pue"], snap["wsf"],
                 offsets, pipe.server, pipe.lam_co2, pipe.lam_h2o,
                 pipe.lam_ref, pipe.history.co2_ref, pipe.history.h2o_ref,
                 defer_eps=self.defer_eps, guard_s=self.guard_s,
-                want_plan=pipe.record_windows)
+                want_plan=pipe.record_windows, warm_start=self.warm_state)
             S = len(offsets)
             return PricedPlan(cost=cost, allowed=allowed, capacity=cap,
                               overrun=np.tile(inst.overrun, (1, S)),
                               num_regions=inst.shape[1], num_slots=S,
                               slot_offsets=np.asarray(offsets, np.float64),
                               presolved=res)
+        if self.warm and not self._warm_warned:
+            self._warm_warned = True
+            obs.warn("policy.warm_ignored",
+                     "warm-started Sinkhorn requires backend='fused'; "
+                     f"backend={pipe.backend!r} prices unfused — ignored")
         plan = self._fcast.build_temporal_plan(
             inst, now_s, ci, ewif, wue, snap["pue"], snap["wsf"], offsets,
             pipe.server, pipe.lam_co2, pipe.lam_h2o, pipe.lam_ref,
@@ -428,6 +442,14 @@ class ForecastPricer(Pricer):
             return RUN, n
         return HOLD, now_s + float(plan.slot_offsets[s])
 
+    @property
+    def sinkhorn_cold_iters(self) -> List[int]:
+        return self.warm_state.cold_iters if self.warm_state else []
+
+    @property
+    def sinkhorn_warm_iters(self) -> List[int]:
+        return self.warm_state.warm_iters if self.warm_state else []
+
 
 # ---------------------------------------------------------------------------
 # Deferral policies
@@ -439,14 +461,24 @@ class DeferralPolicy:
     def bind(self, pipeline: "PolicyPipeline") -> None:
         self.pipe = pipeline
 
-    def admit(self, jobs: Sequence[problem.Job], now_s: float
+    def admit(self, jobs: Sequence[problem.Job], now_s: float,
+              capacity: Optional[int] = None
               ) -> Tuple[List[problem.Job], List[problem.Job]]:
-        """Split the pending set into (due now, still intentionally held)."""
+        """Split the pending set into (due now, still intentionally held).
+        ``capacity`` is the round's total free seats — policies that add
+        rows (re-planning) use it to never displace genuinely due jobs."""
         return list(jobs), []
 
     def hold(self, job: problem.Job, release_s: float, now_s: float) -> None:
         """Record an intentional hold until ``release_s`` (HOLD decode)."""
         raise NotImplementedError
+
+    def revise(self, job: problem.Job, action: str, payload, plan: PricedPlan,
+               row: int, col: int, now_s: float) -> Tuple[str, Optional[float]]:
+        """Last look at a decoded (action, payload) before it is applied —
+        the hook where re-planning policies veto churn (see
+        ``ReplanQueueDeferral``). Default: pass through."""
+        return action, payload
 
     def wake_s(self) -> Optional[float]:
         """Earliest planned release (``Decision.wake_s``), if any."""
@@ -468,7 +500,7 @@ class QueueDeferral(DeferralPolicy):
         from repro import forecast as fcast
         self.queue = fcast.DeferralQueue(guard_s)
 
-    def admit(self, jobs, now_s):
+    def admit(self, jobs, now_s, capacity=None):
         return self.queue.partition(jobs, now_s)
 
     def hold(self, job, release_s, now_s):
@@ -485,6 +517,116 @@ class QueueDeferral(DeferralPolicy):
     def deferred_jobs(self) -> int:
         """Distinct jobs ever time-shifted (re-deferrals don't double-count)."""
         return len(self.queue.unique_held)
+
+
+class ReplanQueueDeferral(QueueDeferral):
+    """Receding-horizon re-planning over the deferral queue.
+
+    ``QueueDeferral`` commits a held job to the slot priced at admission
+    time; this variant sends held jobs *back into pricing every round*, so
+    the plan is re-made against the freshest forecast — the rolling
+    spatio-temporal shifting regime of Attenni et al. (arXiv:2512.08725)
+    on top of WaterWise's carbon/water co-optimization. The solver may
+    confirm the hold (same or new slot — the episode continues, stats
+    uncounted), pull the job forward to run now, or push it later.
+
+    The **re-plan guard**: a job within ``replan_guard_s`` of its planned
+    release stays committed. Re-pricing that close to release cannot move
+    the job materially but doubles solver load and can thrash the plan —
+    the guard bounds both, and makes the commit monotone near release.
+
+    The **hysteresis margin**: running is irreversible, holding is not.
+    Each re-pricing round is a fresh draw from an approximate (entropic)
+    solver on a slot grid re-anchored at *now* — without friction, a held
+    job runs the first round the blur happens to favor slot 0, a ratchet
+    that erodes planned deferrals (measurably worse footprints). So a
+    re-planned "run now" is accepted only when it beats the job's
+    committed slot by ``replan_margin`` *in the same cost matrix*;
+    otherwise the hold is restored at its original release (``revise``).
+    Re-planned holds (slot moves) carry no friction — they stay reversible.
+    """
+
+    def __init__(self, guard_s: float = 240.0,
+                 replan_guard_s: float = 900.0,
+                 replan_margin: float = 0.02):
+        super().__init__(guard_s)
+        self.replan_guard_s = float(replan_guard_s)
+        self.replan_margin = float(replan_margin)
+        self.replans = 0            # re-pricing episodes (job-rounds)
+        self.replan_runs = 0        # re-plans that ran the job early
+        self.replan_vetoes = 0      # early runs vetoed by the margin
+        # Episodes opened before the current re-pricing round:
+        # job_id -> (original held_at_s, pop round's now_s, committed
+        # release_s). Entries are reclaimed by ``hold`` (job re-held:
+        # episode continues) or closed at the next round for jobs that
+        # left the queue.
+        self._carried: dict = {}
+
+    def admit(self, jobs, now_s, capacity=None):
+        q = self.queue
+        if self._carried:
+            # Settle last round's popped-but-not-re-held episodes: a job
+            # that ran (gone from pending) ends its episode at the pop
+            # instant; one the solver dropped (defer / infeasible row) gets
+            # its committed hold restored — re-planning must never *lose* a
+            # commitment.
+            incoming = {j.job_id: j for j in jobs}
+            for jid, (held_at, popped_at, release_s) in self._carried.items():
+                j = incoming.get(jid)
+                if j is None:
+                    q.close_replan(held_at, popped_at)
+                else:
+                    q.hold(j, release_s, now_s, held_at_s=held_at)
+            self._carried.clear()
+        due, held = q.partition(jobs, now_s)
+        if not held:
+            return due, held
+        # Re-plan only into *spare* seats: an added row must never displace
+        # a genuinely due job (urgent-trim) or tip the round into the soft
+        # fallback — under a capacity crunch held jobs stay committed.
+        spare = (len(held) if capacity is None
+                 else max(int(capacity) - len(due), 0))
+        keep: List[problem.Job] = []
+        for j in held:
+            release_s = q._held[j.job_id].release_s
+            if spare > 0 and release_s - now_s > self.replan_guard_s:
+                self._carried[j.job_id] = (q.pop_for_replan(j.job_id),
+                                           now_s, release_s)
+                self.replans += 1
+                spare -= 1
+                due.append(j)
+            else:
+                keep.append(j)
+        if obs.enabled() and len(keep) < len(held):
+            obs.counter("policy.replanned", len(held) - len(keep))
+        return due, keep
+
+    def revise(self, job, action, payload, plan, row, col, now_s):
+        carried = self._carried.get(job.job_id)
+        if carried is None or plan.slot_offsets is None or plan.num_slots < 2:
+            return action, payload
+        release_s = carried[2]
+        S, N = plan.num_slots, plan.num_regions
+        slot_s = float(plan.slot_offsets[1] - plan.slot_offsets[0])
+        s = int(np.clip(np.rint((release_s - now_s) / slot_s), 1, S - 1))
+        if action == HOLD and col // N == s:
+            return action, payload          # plan confirmed (slot unchanged)
+        ok = plan.allowed[row, s * N:(s + 1) * N]
+        if not ok.any():
+            return action, payload          # committed slot gone infeasible
+        committed = float(np.min(np.where(
+            ok, plan.cost[row, s * N:(s + 1) * N], np.inf)))
+        if float(plan.cost[row, col]) <= committed - self.replan_margin:
+            if action == RUN:
+                self.replan_runs += 1
+            return action, payload          # genuine improvement: move
+        self.replan_vetoes += 1
+        return HOLD, release_s              # restore the committed hold
+
+    def hold(self, job, release_s, now_s):
+        carried = self._carried.pop(job.job_id, None)
+        self.queue.hold(job, release_s, now_s,
+                        held_at_s=None if carried is None else carried[0])
 
 
 # ---------------------------------------------------------------------------
@@ -577,7 +719,8 @@ class PolicyPipeline:
             return Decision([], np.zeros(0, np.int64), [], None, False)
 
         with obs.span("policy.admit", pending=len(jobs)):
-            due, held = self.deferral.admit(jobs, now_s)
+            due, held = self.deferral.admit(jobs, now_s,
+                                            capacity=int(capacity.sum()))
             if not due:
                 return Decision([], np.zeros(0, np.int64), held, None, False,
                                 wake_s=self.deferral.wake_s())
@@ -637,13 +780,18 @@ class PolicyPipeline:
         scheduled: List[problem.Job] = []
         assign: List[int] = []
         with obs.span("policy.extract", jobs=len(due)):
-            for j, col in zip(due, res.assign):
+            for row, (j, col) in enumerate(zip(due, res.assign)):
                 col = int(col)
                 if col < 0:
                     deferred.append(j)
                     continue
-                action, payload = ((RUN, col) if softened
-                                   else self.pricer.decode(plan, col, now_s))
+                if softened:
+                    # Soft fallback is slot-0 only: run, no revision.
+                    action, payload = RUN, col
+                else:
+                    action, payload = self.pricer.decode(plan, col, now_s)
+                    action, payload = self.deferral.revise(
+                        j, action, payload, plan, row, col, now_s)
                 if action == RUN:
                     j.region = int(payload)
                     scheduled.append(j)
@@ -697,15 +845,27 @@ def forecast_pipeline(tele: telemetry.Telemetry, *,
                       lam_co2: float = 0.5, lam_h2o: float = 0.5,
                       lam_ref: float = 0.1, window: int = 10,
                       sigma: float = 10.0,
+                      warm: bool = False, replan: bool = False,
+                      replan_guard_s: float = 900.0,
+                      replan_margin: float = 0.02,
                       record_windows: bool = False) -> PolicyPipeline:
     """Predictive spatio-temporal configuration: forecast-grid pricing +
-    slack-guarded deferral queue over the same pipeline."""
+    slack-guarded deferral queue over the same pipeline.
+
+    ``warm=True`` carries Sinkhorn column potentials between rounds
+    (fused backend only); ``replan=True`` swaps the commit-at-admission
+    queue for receding-horizon re-planning (``ReplanQueueDeferral``) with
+    its ``replan_guard_s`` commit window and ``replan_margin``
+    early-run hysteresis."""
     pricer = ForecastPricer(
         forecaster=forecaster, horizon_slots=horizon_slots, slot_s=slot_s,
         risk=risk, defer_eps=defer_eps, guard_s=guard_s,
         warmup_hours=warmup_hours, forecast_bias=forecast_bias,
-        forecast_noise=forecast_noise, forecast_seed=forecast_seed)
+        forecast_noise=forecast_noise, forecast_seed=forecast_seed,
+        warm=warm)
+    deferral = (ReplanQueueDeferral(guard_s, replan_guard_s, replan_margin)
+                if replan else QueueDeferral(guard_s))
     return PolicyPipeline(
-        tele, pricer, QueueDeferral(guard_s), server=server,
+        tele, pricer, deferral, server=server,
         lam_co2=lam_co2, lam_h2o=lam_h2o, lam_ref=lam_ref, window=window,
         sigma=sigma, backend=backend, record_windows=record_windows)

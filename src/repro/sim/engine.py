@@ -245,6 +245,15 @@ class EventSimulator:
 
     # -- main loop -----------------------------------------------------------
 
+    def stepper(self, scheduler, jobs: Sequence[Job] = (), *,
+                state: Optional[EngineState] = None,
+                hold_grid: bool = False) -> "EngineStepper":
+        """A stepable handle on this engine: the same loop as ``run()`` held
+        open between ``step(until_s)`` calls, with ``inject()`` feeding live
+        arrivals. See :class:`EngineStepper`."""
+        return EngineStepper(self, scheduler, jobs, state=state,
+                             hold_grid=hold_grid)
+
     def run(self, jobs: Sequence[Job], scheduler, *,
             state: Optional[EngineState] = None,
             stop_at: Optional[float] = None,
@@ -269,28 +278,111 @@ class EventSimulator:
         instants bit-aligned with the real run's ``now += w``
         accumulation, so the warm-up can converge to the exact engine
         state of the unsharded run at the shard boundary.
+
+        Implemented on top of :class:`EngineStepper` — one ``step(stop_at)``
+        to the boundary (or to drain) plus the accounting pass — so batch
+        replay and live serving share the loop verbatim.
         """
-        scheduler = resolve_scheduler(scheduler, self.tele)
-        w = self.cfg.window_s
-        jobs = sorted(jobs, key=lambda j: j.submit_time_s)
-        n_jobs = len(jobs)
-        submit = np.array([j.submit_time_s for j in jobs], np.float64)
-        cluster = Cluster(self.capacity)
-        cap_events = self.capacity_events
-        placed: List[Tuple[Job, int, float, float]] = []
-        pending: List[Job] = []
-        i = 0          # arrival cursor
-        ce = 0         # capacity-event cursor
-        now = 0.0
-        prior_rounds = 0
+        st = self.stepper(scheduler, jobs, state=state, hold_grid=hold_grid)
+        st.step(stop_at)
+        return st.result(export_state=export_state)
+
+
+class EngineStepper:
+    """The event-engine loop as a stepable object (live-serving seam).
+
+    Holds every loop variable of the classic ``EventSimulator.run`` —
+    clock, grid phase, arrival cursor, pending queue, cluster, capacity-
+    event cursor — between calls, so the same engine powers both execution
+    modes:
+
+      * **batch replay**: construct with the whole trace, ``step(None)``
+        runs to drain — ``EventSimulator.run`` is exactly this plus the
+        accounting pass, so parity is by construction;
+      * **live serving** (``repro.serve``): ``inject(new_jobs)`` then
+        ``step(t_round)`` per decision round. ``step(until_s)`` uses the
+        ``stop_at`` boundary semantics proven bit-exact by the sharded
+        chained-handoff tests: the engine behaves as if further arrivals
+        exist beyond ``until_s``, so a stream fed chunk-by-chunk at round
+        boundaries reproduces the batch replay of the same arrivals
+        bit-for-bit (pinned in tests/test_serve.py).
+
+    ``step`` may be called after the loop went idle (everything drained);
+    a later ``inject`` + ``step`` resumes exactly like a chained
+    ``run(state=...)`` handoff would.
+    """
+
+    def __init__(self, sim: "EventSimulator", scheduler,
+                 jobs: Sequence[Job] = (), *,
+                 state: Optional[EngineState] = None,
+                 hold_grid: bool = False):
+        self.sim = sim
+        self.scheduler = resolve_scheduler(scheduler, sim.tele)
+        self.hold_grid = hold_grid
+        self.jobs: List[Job] = sorted(jobs, key=lambda j: j.submit_time_s)
+        self._submit: List[float] = [j.submit_time_s for j in self.jobs]
+        self.cluster = Cluster(sim.capacity)
+        self.placed: List[Tuple[Job, int, float, float]] = []
+        self.pending: List[Job] = []
+        self.i = 0          # arrival cursor
+        self.ce = 0         # capacity-event cursor
+        self.now = 0.0
+        self.prior_rounds = 0
         if state is not None:
-            cluster.restore_state(state.cluster)
-            pending = list(state.pending)
-            ce = int(state.applied_events)
-            now = float(state.now)
-            prior_rounds = int(state.rounds)
-        rounds = 0
-        stalls = 0
+            self.cluster.restore_state(state.cluster)
+            self.pending = list(state.pending)
+            self.ce = int(state.applied_events)
+            self.now = float(state.now)
+            self.prior_rounds = int(state.rounds)
+        self.rounds = 0
+        self.stalls = 0
+
+    def inject(self, jobs: Sequence[Job]) -> int:
+        """Feed live arrivals into the un-consumed tail of the trace.
+
+        The tail is re-sorted by submit time (stable), so time-ordered
+        chunks — every arrival source in ``repro.serve`` polls in submit
+        order — leave the consumption order identical to a single up-front
+        sort of the whole trace. Returns the number of injected jobs.
+        """
+        new = list(jobs)
+        if not new:
+            return 0
+        tail = self.jobs[self.i:] + new
+        tail.sort(key=lambda j: j.submit_time_s)
+        del self.jobs[self.i:]
+        self.jobs.extend(tail)
+        del self._submit[self.i:]
+        self._submit.extend(j.submit_time_s for j in tail)
+        return len(new)
+
+    def next_arrival_s(self) -> Optional[float]:
+        """Submit time of the next un-consumed arrival, if any."""
+        if self.i < len(self.jobs):
+            return self.jobs[self.i].submit_time_s
+        return None
+
+    def step(self, until_s: Optional[float] = None) -> float:
+        """Advance the engine to the first loop instant at-or-past
+        ``until_s`` (the ``stop_at`` boundary semantics), or to full drain
+        when ``until_s`` is ``None``. Returns the engine clock."""
+        sim = self.sim
+        stop_at = until_s
+        w = sim.cfg.window_s
+        scheduler = self.scheduler
+        jobs = self.jobs
+        cluster = self.cluster
+        cap_events = sim.capacity_events
+        placed = self.placed
+        pending = self.pending
+        i = self.i
+        ce = self.ce
+        now = self.now
+        rounds = self.rounds
+        stalls = self.stalls
+        hold_grid = self.hold_grid
+        n_jobs = len(jobs)
+        submit = self._submit
         while i < n_jobs or pending or cluster.busy_any():
             if stop_at is not None and now >= stop_at:
                 break
@@ -299,7 +391,7 @@ class EventSimulator:
                 # Settle busy/provisioned integrals up to the event instant
                 # so the capacity change is not billed retroactively.
                 cluster.advance(t_event)
-                cluster.set_capacity(resolve_capacity(payload, self.capacity))
+                cluster.set_capacity(resolve_capacity(payload, sim.capacity))
                 ce += 1
             cluster.advance(now)
             while i < n_jobs and submit[i] <= now:
@@ -313,8 +405,8 @@ class EventSimulator:
                     progressed = bool(dec.scheduled)
                     for job, n in zip(dec.scheduled, dec.assign):
                         n = int(n)
-                        lat = self.tele.transfer_latency_s(job.package_bytes,
-                                                           job.home_region, n)
+                        lat = sim.tele.transfer_latency_s(job.package_bytes,
+                                                          job.home_region, n)
                         start = now + lat
                         if job.planned_start_s is not None:
                             start = max(start, job.planned_start_s)
@@ -400,34 +492,52 @@ class EventSimulator:
                     now = t
             else:
                 break
+        self.pending = pending
+        self.i = i
+        self.ce = ce
+        self.now = now
+        self.rounds = rounds
+        self.stalls = stalls
+        return now
+
+    def result(self, export_state: bool = False) -> Dict:
+        """Settle the utilization integrals at the current clock, run the
+        batched accounting pass over everything placed so far, and build the
+        engine result dict (same shape as ``EventSimulator.run``'s)."""
+        sim = self.sim
+        cluster = self.cluster
+        pending = self.pending
+        now = self.now
         cluster.advance(now)
         horizon = max(now, cluster.drain_time(), 1.0)
-        records, frame = self._account_all(placed)
+        records, frame = sim._account_all(self.placed)
         if obs.enabled():
             obs.observe("engine.pending_depth", float(len(pending)))
             tr = obs.tracer()
             if tr is not None:
-                self._emit_series(tr, frame, horizon)
+                sim._emit_series(tr, frame, horizon)
+        rounds = self.prior_rounds + self.rounds
         result = dict(records=records, frame=frame,
-                      windows=prior_rounds + rounds,
-                      rounds=prior_rounds + rounds,
-                      solve_times=np.asarray(getattr(scheduler, "solve_times",
-                                                     [])),
+                      windows=rounds,
+                      rounds=rounds,
+                      solve_times=np.asarray(getattr(self.scheduler,
+                                                     "solve_times", [])),
                       utilization=cluster.utilization(horizon),
                       peak_busy=cluster.peak_busy.copy(),
                       horizon_s=horizon,
                       drain_s=cluster.drain_time(),
                       busy_integral_s=cluster.busy_integral_s,
                       cap_integral_s=cluster.cap_integral_s,
-                      unfinished=len(pending) + (n_jobs - i))
+                      unfinished=len(pending) + (len(self.jobs) - self.i))
         if export_state:
             # Arrivals the loop never consumed (all below ``stop_at`` by
             # slicing) join the carried queue in submit order — exactly the
             # order the single run would have appended them in.
             result["state"] = EngineState(
-                now=now, pending=pending + jobs[i:], applied_events=ce,
+                now=now, pending=pending + self.jobs[self.i:],
+                applied_events=self.ce,
                 cluster=cluster.export_state(),
-                rounds=prior_rounds + rounds)
+                rounds=rounds)
         return result
 
 
