@@ -13,6 +13,11 @@ strings, bracketed params included):
   PYTHONPATH=src python -m benchmarks.run --sweep \\
       --schedulers 'baseline,waterwise[lam_h2o=0.7,backend=jax]' \\
       --scenarios 'diurnal[jobs_per_day=1e5],drought-summer'
+  PYTHONPATH=src python -m benchmarks.run --sweep \\
+      --scenarios 'workflow-diurnal,workflow-burst' \\
+      --schedulers 'waterwise,waterwise-embodied[lam_embodied=0.35]'
+      # DAG traces: precedence release + critical-path deadlines +
+      # the embodied-carbon accounting column
 
 Executor backends (identical rows, different scaling): ``--executor
 serial``, ``--executor process`` (one worker per cell, the default), or
@@ -38,6 +43,14 @@ a Poisson-burst storm through the bounded admission loop):
   PYTHONPATH=src python -m benchmarks.run --serve
   PYTHONPATH=src python -m benchmarks.serve_bench --quick \\
       --check BENCH_8.json                               # the CI gate
+
+Workflow (DAG) benchmark (the persisted BENCH_9 harness — precedence
+release, critical-path deadlines, DAG batch/stream bit parity, and the
+embodied-carbon trade-off curve):
+
+  PYTHONPATH=src python -m benchmarks.workflow_bench
+  PYTHONPATH=src python -m benchmarks.workflow_bench --quick \\
+      --check BENCH_9.json                               # the CI gate
 
 Registries (names, accepted params, descriptions):
 
@@ -174,8 +187,10 @@ def main() -> None:
                     help="run the scenario sweep instead of the paper figures")
     ap.add_argument("--scenarios", default="",
                     help="comma-separated scenario specs, e.g. "
-                         "'diurnal[jobs_per_day=1e5],drought-summer' "
-                         "(default: all registered scenarios)")
+                         "'diurnal[jobs_per_day=1e5],drought-summer' or the "
+                         "DAG cells 'workflow-diurnal,workflow-burst' "
+                         "(default: all registered scenarios; see "
+                         "--list-scenarios)")
     ap.add_argument("--schedulers",
                     default="baseline,least-load,ecovisor,waterwise",
                     help="comma-separated policy specs, e.g. "

@@ -18,6 +18,9 @@ benchmarks/README.md for the field-by-field schema):
   replan   receding-horizon re-planning vs commit-at-admission on the
            deterministic diurnal cell: footprint deltas and re-plan
            episode accounting
+  regime   the same comparison on the ``regime-shift`` cell (mid-trace CI
+           step change) with a NON-oracle forecaster — the regime where
+           re-planning is supposed to *win*; deltas recorded signed
   stream   a Poisson-burst storm through the full service loop — stream
            accounting, queue depths, and wall-clock round latency
 
@@ -35,7 +38,7 @@ import sys
 import time
 from typing import Dict, List, Optional
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
 
 #: Ratio metrics the CI gate enforces (dotted paths into the document).
 GATED_RATIOS = (
@@ -47,6 +50,7 @@ GATED_FLAGS = (
     "parity.records_equal",
     "warm.plan_equal",
     "replan.replans_positive",
+    "regime.replans_positive",
     "stream.queue_bound_respected",
     "stream.accounting_exact",
     "stream.drained",
@@ -202,6 +206,50 @@ def bench_replan(days: float = 0.1, seed: int = 3) -> Dict:
         replans_positive=replan["replans"] > 0)
 
 
+def bench_replan_regime(days: float = 0.15, seed: int = 3) -> Dict:
+    """Re-planning on the ``regime-shift`` cell: a mid-trace step change
+    flips the CI ranking, so slots committed at admission are priced on a
+    stale regime. The forecaster is deliberately NON-oracle (Holt-Winters):
+    an oracle already sees the step at admission time, which would make
+    re-planning neutral by construction — exactly the regime this section
+    exists to distinguish. Deltas are *signed* (positive = re-planning won).
+    """
+    from repro.policy.pipeline import forecast_pipeline
+    from repro.sim.engine import EventSimulator, SimConfig
+    from repro.sim.scenarios import get_scenario
+
+    inst = get_scenario("regime-shift").build(days, seed, 23000.0, 0.15,
+                                              tolerance=4.0)
+
+    def run(replan: bool) -> Dict:
+        ctl = forecast_pipeline(inst.tele, forecaster="holtwinters",
+                                risk=0.0, slot_s=1800.0,
+                                defer_eps=1e-4, backend="fused",
+                                replan=replan)
+        t0 = time.perf_counter()
+        res = EventSimulator(inst.tele, inst.capacity, SimConfig()).run(
+            copy.deepcopy(inst.jobs), ctl)
+        rec = res["records"]
+        return dict(carbon_kg=sum(r.carbon_g for r in rec) / 1e3,
+                    water_kl=sum(r.water_l for r in rec) / 1e3,
+                    mean_defer_s=float(ctl.mean_defer_s),
+                    replans=int(getattr(ctl, "replans", 0)),
+                    replan_runs=int(getattr(ctl, "replan_runs", 0)),
+                    replan_vetoes=int(getattr(ctl, "replan_vetoes", 0)),
+                    wall_s=time.perf_counter() - t0)
+
+    commit, replan = run(False), run(True)
+    return dict(
+        cell="regime-shift[borg]", days=days, seed=seed,
+        jobs=len(inst.jobs), forecaster="holtwinters",
+        commit=commit, replan=replan,
+        co2_savings_pct=100 * (1 - replan["carbon_kg"]
+                               / max(commit["carbon_kg"], 1e-12)),
+        h2o_savings_pct=100 * (1 - replan["water_kl"]
+                               / max(commit["water_kl"], 1e-12)),
+        replans_positive=replan["replans"] > 0)
+
+
 # ---------------------------------------------------------------------------
 # stream section: Poisson-burst storm through the full service loop
 # ---------------------------------------------------------------------------
@@ -268,6 +316,7 @@ def run_bench(quick: bool = False) -> Dict:
         parity=bench_parity(days=0.03 if quick else 0.05),
         warm=bench_warm(rounds=3 if quick else 5),
         replan=bench_replan(days=0.05 if quick else 0.1),
+        regime=bench_replan_regime(days=0.1 if quick else 0.15),
         stream=bench_stream(duration_s=600.0 if quick else 1800.0),
     )
 
@@ -301,6 +350,7 @@ def check(current: Dict, baseline: Dict, tolerance: float = 0.10) -> List[str]:
 
 def to_text(doc: Dict) -> str:
     p, w, r, s = doc["parity"], doc["warm"], doc["replan"], doc["stream"]
+    g = doc["regime"]
     return "\n".join([
         f"# serve bench (schema v{doc['schema_version']}, "
         f"device={doc['env']['device']})", "",
@@ -320,6 +370,12 @@ def to_text(doc: Dict) -> str:
         f"{r['h2o_savings_pct']:+.2f}%), {r['replan']['replans']} replans "
         f"({r['replan']['replan_runs']} early runs, "
         f"{r['replan']['replan_vetoes']} vetoes)",
+        f"regime {g['cell']} ({g['forecaster']}): {g['jobs']} jobs — commit "
+        f"{g['commit']['carbon_kg']:.2f} kgCO2 / "
+        f"{g['commit']['water_kl']:.3f} kL vs replan "
+        f"{g['replan']['carbon_kg']:.2f} / {g['replan']['water_kl']:.3f} "
+        f"(co2 {g['co2_savings_pct']:+.2f}%, h2o "
+        f"{g['h2o_savings_pct']:+.2f}%), {g['replan']['replans']} replans",
         f"stream: {s['jobs_in']} offered / {s['admitted']} admitted / "
         f"{s['shed']} shed over {s['rounds']} rounds — "
         f"p50 {s['p50_round_ms']:.1f}ms p99 {s['p99_round_ms']:.1f}ms, "
@@ -337,6 +393,7 @@ README_END = "<!-- BENCH_8:end -->"
 def to_readme(doc: Dict) -> str:
     """The README serving block, regenerated verbatim from the document."""
     p, w, r, s = doc["parity"], doc["warm"], doc["replan"], doc["stream"]
+    g = doc["regime"]
     return "\n".join([
         README_BEGIN,
         f"Committed serving baseline (`BENCH_8.json`, schema "
@@ -350,7 +407,11 @@ def to_readme(doc: Dict) -> str:
         f"(**{w['warm_speedup']:.1f}×**, same assignment). "
         f"Receding-horizon re-planning vs commit-at-admission: "
         f"{r['co2_savings_pct']:+.2f}% CO₂ / {r['h2o_savings_pct']:+.2f}% "
-        f"water with {r['replan']['replans']} re-plan episodes. "
+        f"water with {r['replan']['replans']} re-plan episodes on the "
+        f"diurnal cell, and {g['co2_savings_pct']:+.2f}% CO₂ / "
+        f"{g['h2o_savings_pct']:+.2f}% water under a mid-trace telemetry "
+        f"regime shift (non-oracle {g['forecaster']} forecasts — the cell "
+        f"where committed plans go stale). "
         f"Poisson-burst storm ({s['jobs_per_day']:.0f} jobs/day, "
         f"{s['duration_s']:.0f} s): {s['jobs_in']} offered, {s['shed']} "
         f"shed, round latency p50 {s['p50_round_ms']:.0f} ms / p99 "

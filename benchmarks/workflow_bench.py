@@ -1,0 +1,355 @@
+"""Persisted workflow (DAG) bench — precedence release, critical-path
+deadlines, and the embodied-carbon trade-off (BENCH_9.json).
+
+  PYTHONPATH=src python -m benchmarks.workflow_bench             # print only
+  PYTHONPATH=src python -m benchmarks.workflow_bench --out BENCH_9.json
+  PYTHONPATH=src python -m benchmarks.workflow_bench --quick \\
+      --check BENCH_9.json --tolerance 0.10                      # CI gate
+
+Three sections, one JSON document (``schema_version`` pins the layout; see
+benchmarks/README.md for the field-by-field schema):
+
+  dag       the workflow-diurnal cell through ``waterwise``: DAG replay
+            throughput, the zero-precedence-violations invariant, the
+            critical-path miss rate, and the embodied accounting column
+  parity    DAG jobs streamed through ``repro.serve`` (DecisionLoop over
+            ReplayArrivals) must reproduce batch ``EventSimulator.run`` of
+            the same trace bit for bit — precedence release included
+  tradeoff  ``waterwise`` vs ``waterwise-embodied[lam_embodied=...]`` on
+            the same cell: the three-way curve (operational carbon,
+            embodied carbon, water) and the pinned row where the embodied
+            variant reduces operational+embodied carbon at bounded water
+            cost
+
+The CI gate enforces the correctness flags; wall-clock throughput is
+recorded for humans but never gated (it differs across runner generations).
+"""
+from __future__ import annotations
+
+import argparse
+import copy
+import json
+import sys
+import time
+from typing import Dict, List, Optional
+
+SCHEMA_VERSION = 1
+
+#: Ratio metrics the CI gate enforces (dotted paths into the document).
+#: Empty on purpose: the deterministic invariants are flags, and the only
+#: ratios here (throughput) are machine-relative walls.
+GATED_RATIOS = ()
+
+#: Correctness flags that must stay True.
+GATED_FLAGS = (
+    "dag.zero_precedence_violations",
+    "parity.records_equal",
+    "tradeoff.tradeoff_positive",
+)
+
+#: Maximum tolerated water increase for the pinned trade-off row (fraction
+#: of the plain-waterwise water total).
+WATER_BOUND = 0.10
+
+
+def _record_key(r):
+    return (r.job.job_id, r.region, r.start_s, r.finish_s,
+            r.carbon_g, r.water_l, r.embodied_g)
+
+
+def _cell(days: float, seed: int, jobs_per_day: float):
+    from repro.sim.scenarios import get_scenario
+    return get_scenario("workflow-diurnal").build(days, seed, jobs_per_day,
+                                                  0.15)
+
+
+# ---------------------------------------------------------------------------
+# dag section: replay throughput + invariants on the workflow cell
+# ---------------------------------------------------------------------------
+
+def bench_dag(days: float = 0.15, seed: int = 0,
+              jobs_per_day: float = 6000.0) -> Dict:
+    from repro.sim import metrics
+    from repro.sim.engine import EventSimulator, SimConfig
+    from repro.workflows import precedence_violations, workflow_miss_rate
+
+    inst = _cell(days, seed, jobs_per_day)
+    t0 = time.perf_counter()
+    res = EventSimulator(inst.tele, inst.capacity, SimConfig()).run(
+        copy.deepcopy(inst.jobs), "waterwise")
+    wall = time.perf_counter() - t0
+    rec = res["records"]
+    miss_rate, workflows = workflow_miss_rate(rec)
+    viol = precedence_violations(rec)
+    s = metrics.summarize(res)
+    return dict(cell="workflow-diurnal", days=days, seed=seed,
+                jobs=len(inst.jobs), workflows=workflows,
+                placed=len(rec), unfinished=int(res["unfinished"]),
+                wall_s=wall, throughput_jobs_per_s=len(rec) / max(wall, 1e-9),
+                precedence_violations=int(viol),
+                zero_precedence_violations=viol == 0,
+                cpath_miss_rate=miss_rate,
+                violation_pct=s["violation_pct"],
+                carbon_kg=s["carbon_kg"], water_kl=s["water_kl"],
+                embodied_kg=s["embodied_kg"])
+
+
+# ---------------------------------------------------------------------------
+# parity section: DAG stream ≡ DAG batch, bit for bit
+# ---------------------------------------------------------------------------
+
+def bench_parity(days: float = 0.1, seed: int = 1,
+                 jobs_per_day: float = 4000.0) -> Dict:
+    from repro.policy.pipeline import forecast_pipeline
+    from repro.serve import DecisionLoop, ReplayArrivals, ServeConfig
+    from repro.sim.engine import EventSimulator, SimConfig
+    from repro.workflows import precedence_violations
+
+    inst = _cell(days, seed, jobs_per_day)
+
+    def pipeline():
+        return forecast_pipeline(inst.tele, forecaster="oracle", risk=0.0,
+                                 defer_eps=1e-4, backend="fused")
+
+    t0 = time.perf_counter()
+    batch = EventSimulator(inst.tele, inst.capacity, SimConfig()).run(
+        copy.deepcopy(inst.jobs), pipeline())
+    batch_wall = time.perf_counter() - t0
+
+    sim = EventSimulator(inst.tele, inst.capacity, SimConfig())
+    loop = DecisionLoop(sim, pipeline(),
+                        ReplayArrivals(copy.deepcopy(inst.jobs)),
+                        ServeConfig(round_s=300.0, queue_bound=1 << 30))
+    t0 = time.perf_counter()
+    rep = loop.run(days * 86400.0)
+    stream_wall = time.perf_counter() - t0
+
+    stream = loop.stepper.result()
+    eq = ([_record_key(r) for r in batch["records"]]
+          == [_record_key(r) for r in stream["records"]])
+    return dict(cell="workflow-diurnal", days=days, seed=seed,
+                jobs=len(inst.jobs), rounds=rep.rounds,
+                engine_rounds=rep.engine_rounds,
+                records_equal=bool(eq),
+                batch_violations=int(precedence_violations(batch["records"])),
+                stream_violations=int(
+                    precedence_violations(stream["records"])),
+                batch_wall_s=batch_wall, stream_wall_s=stream_wall)
+
+
+# ---------------------------------------------------------------------------
+# tradeoff section: embodied+operational carbon vs water, by λ_emb
+# ---------------------------------------------------------------------------
+
+def bench_tradeoff(days: float = 0.15, seed: int = 0,
+                   jobs_per_day: float = 6000.0,
+                   lams=(0.0, 0.20, 0.35, 0.50)) -> Dict:
+    from repro.sim import metrics
+    from repro.sim.engine import EventSimulator, SimConfig
+
+    inst = _cell(days, seed, jobs_per_day)
+    curve: List[Dict] = []
+    for lam in lams:
+        spec = ("waterwise" if lam == 0.0
+                else f"waterwise-embodied[lam_embodied={lam}]")
+        res = EventSimulator(inst.tele, inst.capacity, SimConfig()).run(
+            copy.deepcopy(inst.jobs), spec)
+        s = metrics.summarize(res)
+        curve.append(dict(
+            lam_embodied=lam, spec=spec,
+            carbon_kg=s["carbon_kg"], embodied_kg=s["embodied_kg"],
+            water_kl=s["water_kl"],
+            total_carbon_kg=s["carbon_kg"] + s["embodied_kg"],
+            violation_pct=s["violation_pct"]))
+    base = curve[0]
+    # The pinned row: best total (operational+embodied) carbon among the
+    # embodied-weighted variants whose water stays within WATER_BOUND of
+    # plain waterwise.
+    bounded = [row for row in curve[1:]
+               if row["water_kl"] <= base["water_kl"] * (1 + WATER_BOUND)]
+    best = min(bounded, key=lambda r: r["total_carbon_kg"]) if bounded \
+        else None
+    positive = best is not None and \
+        best["total_carbon_kg"] < base["total_carbon_kg"]
+    out = dict(cell="workflow-diurnal", days=days, seed=seed,
+               water_bound=WATER_BOUND, curve=curve,
+               tradeoff_positive=bool(positive))
+    if best is not None:
+        out["best"] = dict(
+            best,
+            total_carbon_savings_pct=100 * (1 - best["total_carbon_kg"]
+                                            / base["total_carbon_kg"]),
+            water_cost_pct=100 * (best["water_kl"] / base["water_kl"] - 1))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# document assembly / gate
+# ---------------------------------------------------------------------------
+
+def run_bench(quick: bool = False) -> Dict:
+    import jax
+
+    dev = jax.devices()[0]
+    return dict(
+        schema_version=SCHEMA_VERSION,
+        bench="workflow",
+        env=dict(platform=sys.platform, device=dev.platform,
+                 jax=jax.__version__,
+                 python=".".join(map(str, sys.version_info[:3]))),
+        dag=bench_dag(days=0.08 if quick else 0.15),
+        parity=bench_parity(days=0.05 if quick else 0.1),
+        tradeoff=bench_tradeoff(days=0.08 if quick else 0.15),
+    )
+
+
+def check(current: Dict, baseline: Dict, tolerance: float = 0.10) -> List[str]:
+    """Return failure strings (empty == pass). Gates ratio metrics at
+    ``baseline * (1 - tolerance)`` and correctness flags at True."""
+    from benchmarks.bench import _lookup
+
+    fails: List[str] = []
+    if current.get("schema_version") != baseline.get("schema_version"):
+        fails.append(f"schema_version {current.get('schema_version')} != "
+                     f"baseline {baseline.get('schema_version')}")
+        return fails
+    for path in GATED_RATIOS:
+        base_vals = dict(_lookup(baseline, path))
+        for name, cur in _lookup(current, path):
+            base = base_vals.get(name)
+            if base is None:
+                continue
+            floor = base * (1.0 - tolerance)
+            if cur < floor:
+                fails.append(f"{name}: {cur:.3f} < floor {floor:.3f} "
+                             f"(baseline {base:.3f}, tol {tolerance:.0%})")
+    for path in GATED_FLAGS:
+        for name, cur in _lookup(current, path):
+            if cur is not True:
+                fails.append(f"{name}: expected True, got {cur!r}")
+    return fails
+
+
+def to_text(doc: Dict) -> str:
+    d, p, t = doc["dag"], doc["parity"], doc["tradeoff"]
+    best = t.get("best")
+    lines = [
+        f"# workflow bench (schema v{doc['schema_version']}, "
+        f"device={doc['env']['device']})", "",
+        f"dag {d['cell']}: {d['jobs']} tasks / {d['workflows']} workflows — "
+        f"{d['placed']} placed in {d['wall_s']:.2f}s "
+        f"({d['throughput_jobs_per_s']:.0f} jobs/s), "
+        f"precedence_violations={d['precedence_violations']}, "
+        f"cpath_miss_rate={d['cpath_miss_rate']:.3f}, "
+        f"embodied {d['embodied_kg']:.2f} kg / operational "
+        f"{d['carbon_kg']:.2f} kg / water {d['water_kl']:.3f} kL",
+        f"parity {p['cell']}: {p['jobs']} tasks, {p['rounds']} stream "
+        f"rounds — records_equal={p['records_equal']} "
+        f"(violations batch={p['batch_violations']} "
+        f"stream={p['stream_violations']}; batch {p['batch_wall_s']:.2f}s, "
+        f"stream {p['stream_wall_s']:.2f}s)",
+    ]
+    curve = ", ".join(
+        f"λ={row['lam_embodied']:.2f}: {row['total_carbon_kg']:.2f} kg "
+        f"/ {row['water_kl']:.3f} kL" for row in t["curve"])
+    lines.append(f"tradeoff {t['cell']}: {curve}")
+    if best:
+        lines.append(
+            f"  pinned: λ_emb={best['lam_embodied']:.2f} saves "
+            f"{best['total_carbon_savings_pct']:+.2f}% total carbon at "
+            f"{best['water_cost_pct']:+.2f}% water "
+            f"(bound {100 * t['water_bound']:.0f}%) — "
+            f"tradeoff_positive={t['tradeoff_positive']}")
+    return "\n".join(lines)
+
+
+README_BEGIN = ("<!-- BENCH_9:begin "
+                "(benchmarks.workflow_bench --update-readme) -->")
+README_END = "<!-- BENCH_9:end -->"
+
+
+def to_readme(doc: Dict) -> str:
+    """The README workflow block, regenerated verbatim from the document."""
+    d, p, t = doc["dag"], doc["parity"], doc["tradeoff"]
+    best = t.get("best", {})
+    return "\n".join([
+        README_BEGIN,
+        f"Committed workflow baseline (`BENCH_9.json`, schema "
+        f"v{doc['schema_version']}, {doc['env']['device']} / jax "
+        f"{doc['env']['jax']}): the workflow-diurnal cell replays "
+        f"{d['jobs']} DAG tasks across {d['workflows']} workflows with "
+        f"**zero precedence violations** and a "
+        f"{100 * d['cpath_miss_rate']:.1f}% critical-path miss rate "
+        f"({d['throughput_jobs_per_s']:.0f} tasks/s replay). Streamed DAG "
+        f"replay is **bit-identical** to batch "
+        f"(`records_equal={p['records_equal']}` over {p['jobs']} tasks). "
+        f"Embodied-carbon trade-off: "
+        f"`waterwise-embodied[lam_embodied={best.get('lam_embodied', 0)}]` "
+        f"cuts operational+embodied carbon by "
+        f"**{best.get('total_carbon_savings_pct', 0):+.2f}%** vs plain "
+        f"`waterwise` at {best.get('water_cost_pct', 0):+.2f}% water "
+        f"(bound +{100 * t['water_bound']:.0f}%).",
+        README_END])
+
+
+def update_readme(doc: Dict, path: str = "README.md") -> None:
+    with open(path) as fh:
+        text = fh.read()
+    i, j = text.index(README_BEGIN), text.index(README_END)
+    text = text[:i] + to_readme(doc) + text[j + len(README_END):]
+    with open(path, "w") as fh:
+        fh.write(text)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--out", help="write the JSON document here")
+    ap.add_argument("--check", metavar="BASELINE",
+                    help="compare against a committed baseline JSON; "
+                         "exit 1 on regression")
+    ap.add_argument("--tolerance", type=float, default=0.10,
+                    help="allowed relative drop in gated ratios "
+                         "(default 0.10)")
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller cells (CI lane)")
+    ap.add_argument("--update-readme", action="store_true",
+                    help="regenerate the README workflow block from the "
+                         "document")
+    ap.add_argument("--load", metavar="FILE",
+                    help="load an existing document instead of running "
+                         "the bench (for --update-readme / --check "
+                         "plumbing)")
+    args = ap.parse_args(argv)
+
+    t0 = time.time()
+    if args.load:
+        with open(args.load) as fh:
+            doc = json.load(fh)
+    else:
+        doc = run_bench(quick=args.quick)
+    print(to_text(doc))
+    print(f"\n# bench wall: {time.time() - t0:.1f}s")
+    if args.update_readme:
+        update_readme(doc)
+        print("# updated README.md workflow block")
+    if args.out:
+        with open(args.out, "w") as fh:
+            json.dump(doc, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+        print(f"# wrote {args.out}")
+    if args.check:
+        with open(args.check) as fh:
+            baseline = json.load(fh)
+        fails = check(doc, baseline, args.tolerance)
+        if fails:
+            print("\n# REGRESSIONS vs " + args.check)
+            for f in fails:
+                print("  FAIL " + f)
+            return 1
+        print(f"\n# gate OK vs {args.check} "
+              f"(tolerance {args.tolerance:.0%})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

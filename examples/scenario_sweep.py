@@ -14,6 +14,10 @@ interchangeable backends producing identical rows:
       --schedulers 'baseline,waterwise[lam_h2o=0.7,backend=flow]'
   PYTHONPATH=src python examples/scenario_sweep.py \\
       --scenarios 'diurnal[jobs_per_day=46000.0]' --executor 'sharded[shards=2]'
+  PYTHONPATH=src python examples/scenario_sweep.py \\
+      --scenarios 'workflow-diurnal,workflow-burst' \\
+      --schedulers 'waterwise,waterwise-embodied[lam_embodied=0.35]'
+      # precedence-constrained DAG traces (see examples/workflow_run.py)
   PYTHONPATH=src python -m benchmarks.run --sweep --full   # 100k jobs, 10d
 """
 import argparse
@@ -32,7 +36,7 @@ def main() -> None:
                     help="comma-separated policy specs (bracketed params OK)")
     ap.add_argument("--scenarios", default=SCENARIOS,
                     help="comma-separated scenario specs (bracketed params "
-                         "OK)")
+                         "OK; DAG cells: workflow-diurnal, workflow-burst)")
     ap.add_argument("--executor", default="process",
                     help="serial | process | sharded[shards=N] — all three "
                          "produce identical rows")

@@ -145,6 +145,83 @@ def tpu_v5e_tray() -> ServerSpec:
 
 
 # ---------------------------------------------------------------------------
+# Per-node power model (ichnos-style idle/peak utilization curve)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PowerModel:
+    """Linear idle/peak utilization power curve of one server node:
+
+        P(u) = P_idle + (P_peak − P_idle) · u        [W],  u ∈ [0, 1]
+
+    Replaces the flat per-job ``energy_kwh`` estimate at trace-generation
+    time: a task's energy is its utilization-dependent draw integrated over
+    its execution window. Pure and array-transparent like the Eq (1)-(6)
+    functions.
+    """
+    idle_w: float
+    peak_w: float
+
+    @classmethod
+    def from_server(cls, server: "ServerSpec") -> "PowerModel":
+        return cls(idle_w=server.idle_power_w, peak_w=server.peak_power_w)
+
+    def power_w(self, utilization: Array) -> Array:
+        import numpy as np
+        u = np.clip(utilization, 0.0, 1.0)
+        return self.idle_w + (self.peak_w - self.idle_w) * u
+
+    def energy_kwh(self, utilization: Array, exec_time_s: Array,
+                   servers: Array = 1) -> Array:
+        """Energy of ``servers`` nodes running ``exec_time_s`` at
+        ``utilization``  [kWh]."""
+        return self.power_w(utilization) * exec_time_s * servers / 3.6e6
+
+
+# ---------------------------------------------------------------------------
+# Per-region embodied-carbon amortization (the third accounting dimension)
+# ---------------------------------------------------------------------------
+
+#: Relative embodied-carbon factor of each region's server fleet. The
+#: structure encodes a fleet-age tension: regions that decarbonized their
+#: grid early also run the oldest, lifetime-extended fleets (depreciated
+#: hardware amortizes little embodied carbon per job), while regions in
+#: the middle of a build-out boom run freshly manufactured servers that
+#: carry the most *unamortized* embodied carbon. So the cleanest-grid
+#: region sits LOW here and the boom region sits high — which is what
+#: makes the three-way objective a genuine trade: the embodied-cheap
+#: region is operationally cheap on carbon but expensive on water.
+#: Applied multiplicatively to the server's amortization rate; regions
+#: beyond the table cycle through it. Deterministic and documented so
+#: accounting is reproducible — a telemetry-side table can replace it
+#: later.
+REGION_EMBODIED_SCALE = (0.70, 1.00, 1.30, 1.20, 1.10)
+
+
+def region_embodied_scale(num_regions: int):
+    """[num_regions] per-region embodied amortization factors."""
+    import numpy as np
+    base = np.asarray(REGION_EMBODIED_SCALE)
+    return base[np.arange(num_regions) % len(base)]
+
+
+def embodied_rate_g_per_s(server: "ServerSpec") -> float:
+    """Amortized embodied-carbon rate of one server: gCO2e per server-second
+    (ichnos ``EmbodiedCarbon`` style — total embodied CO2 spread uniformly
+    over the hardware lifetime)."""
+    return server.embodied_gco2 / server.lifetime_s
+
+
+def job_embodied(exec_time_s: Array, server: "ServerSpec",
+                 region_scale: Array = 1.0, servers: Array = 1) -> Array:
+    """Embodied gCO2e a job's execution amortizes: rate · t_j · servers,
+    scaled by the per-region fleet factor. This is the NEW accounting
+    column — it is *not* folded into the Eq (1) carbon the pricers already
+    report (that keeps the original embodied term for backward parity)."""
+    return embodied_rate_g_per_s(server) * exec_time_s * servers * region_scale
+
+
+# ---------------------------------------------------------------------------
 # Convenience: footprints of a (job, region, time) triple
 # ---------------------------------------------------------------------------
 

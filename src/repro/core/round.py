@@ -67,7 +67,7 @@ import jax.numpy as jnp
 import numpy as np
 
 import repro.obs as obs
-from repro.core import footprint, solvers
+from repro.core import footprint, problem, solvers
 from repro.core.solvers import jax_solver
 from repro.core.solvers.jax_solver import BIG, _NEG, bucket_for
 
@@ -468,8 +468,10 @@ def fused_temporal_round(inst, now_s: float, ci, ewif, wue, pue, wsf,
         for i, j in enumerate(jobs):
             blob[i, 0] = j.energy_kwh
             blob[i, 1] = j.exec_time_s
-            blob[i, 2] = j.slack_budget_s(now_s)
             blob[i, 3] = 1.0
+        # One shared vectorized slack definition (critical-path aware for
+        # workflow tasks) — same expression the planner/pricers mask with.
+        blob[:M, 2] = problem.slack_budget(jobs, now_s)
         # slot-major [ci | ewif | wue] per slot — [S, 3R] blocks flattened
         blob[:M, 4:4 + 3 * S * N] = np.concatenate(
             [ci, ewif, wue], axis=2).reshape(M, 3 * S * N)

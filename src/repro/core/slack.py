@@ -18,7 +18,9 @@ from typing import Sequence
 
 import numpy as np
 
-from repro.core.problem import Job, latency_matrix
+from repro.core.problem import Job, latency_matrix, slack_budget
+
+__all__ = ["urgency", "pick_most_urgent", "slack_budget"]
 
 
 def urgency(jobs: Sequence[Job], now_s: float,
@@ -31,6 +33,12 @@ def urgency(jobs: Sequence[Job], now_s: float,
     lines 5-7), where the pending set is by definition large. Pass the
     telemetry's identity-mapped WAN tables (``tele.wan_bw_gbps`` /
     ``tele.wan_rtt_s``) so region-subset runs rank with the right links.
+
+    Workflow tasks rank by their critical-path slack (``problem.
+    slack_budget``) minus the average transfer latency — the same shared
+    slack definition the deferral queue and the Eq (11) mask use. Plain
+    jobs keep the exact original expression (op order preserved for
+    bit-stable rankings).
     """
     if not jobs:
         return np.zeros(0)
@@ -40,7 +48,13 @@ def urgency(jobs: Sequence[Job], now_s: float,
     waited = np.maximum(
         now_s - np.array([j.submit_time_s for j in jobs]), 0.0)
     tol_budget = np.array([j.tolerance * j.exec_time_s for j in jobs])
-    return tol_budget - l_avg - waited
+    plain = tol_budget - l_avg - waited
+    if all(j.deadline_override_s is None for j in jobs):
+        return plain
+    return np.where(
+        np.fromiter((j.deadline_override_s is None for j in jobs),
+                    bool, len(jobs)),
+        plain, slack_budget(jobs, now_s) - l_avg)
 
 
 def pick_most_urgent(jobs: Sequence[Job], now_s: float, k: int,

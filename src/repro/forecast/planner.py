@@ -26,7 +26,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 import repro.obs as obs
-from repro.core import footprint
+from repro.core import footprint, problem
 from repro.core.problem import Job, ProblemInstance
 
 
@@ -101,7 +101,7 @@ def build_temporal_plan(inst: ProblemInstance, now_s: float,
     # Deadline mask: waiting to slot s + transfer must leave ``guard_s`` of
     # tolerance budget (slot 0 keeps the exact Eq-11 mask — no guard — so the
     # planner is never *less* feasible than the reactive controller).
-    budget = np.array([j.slack_budget_s(now_s) for j in jobs])  # [M]
+    budget = problem.slack_budget(jobs, now_s)                  # [M]
     need = slot_offsets[None, :, None] + inst.latency[:, None, :]
     allowed = need + guard_s <= budget[:, None, None] + 1e-9
     allowed[:, 0, :] = inst.allowed

@@ -23,6 +23,8 @@ _HELP: Dict[str, str] = {
                "specifying only one sets the other to its complement)",
     "lam_h2o": "water weight λ_H2O (complement rule as for lam_co2)",
     "lam_ref": "history-term weight λ_ref (Eq 8)",
+    "lam_emb": "embodied-carbon weight λ_emb (three-way Eq-8 extension; "
+               "λ_CO2 + λ_H2O + λ_emb must sum to 1)",
     "window": "history-learner trailing window (rounds)",
     "sigma": "soft-violation penalty σ (Eqs 12-13)",
     "backend": "solver backend (flow / jax / fused / scipy / pulp)",
@@ -137,6 +139,22 @@ def _complete_lams(p: Dict) -> Dict:
                  params=_sig_params(reactive_pipeline))
 def _waterwise(tele, **p):
     return reactive_pipeline(tele, **_complete_lams(p))
+
+
+@register_policy("waterwise-embodied",
+                 "three-way footprint controller: adds per-region amortized "
+                 "embodied carbon to the Eq-8 objective "
+                 "(λ_emb + equal-split operational weights sum to 1)",
+                 params=[Param("lam_embodied", float, 0.2,
+                               "embodied-carbon weight λ_emb; the remaining "
+                               "(1-λ_emb) splits evenly between carbon and "
+                               "water")]
+                 + _sig_params(reactive_pipeline,
+                               exclude=("lam_co2", "lam_h2o", "lam_emb")))
+def _waterwise_embodied(tele, lam_embodied: float = 0.2, **p):
+    op = (1.0 - lam_embodied) / 2.0
+    return reactive_pipeline(tele, lam_co2=op, lam_h2o=op,
+                             lam_emb=lam_embodied, **p)
 
 
 @register_policy("waterwise-forecast",

@@ -181,7 +181,8 @@ class SnapshotPricer(Pricer):
         pipe = self.pipe
         history = pipe.history
         cost = inst.objective_matrix(pipe.lam_co2, pipe.lam_h2o, pipe.lam_ref,
-                                     history.co2_ref, history.h2o_ref)
+                                     history.co2_ref, history.h2o_ref,
+                                     lam_emb=pipe.lam_emb)
         capacity = np.asarray(inst.capacity)
         hist = history.mean_raw()
         if hist is None:
@@ -199,6 +200,11 @@ class SnapshotPricer(Pricer):
             hist["wue"][None, :], snap["wsf"][None, :], pipe.server)
         h_obj = (pipe.lam_co2 * h_co2 / inst.co2_max[:, None]
                  + pipe.lam_h2o * h_h2o / inst.h2o_max[:, None])
+        if pipe.lam_emb and inst.emb is not None:
+            # Embodied amortization is time-invariant: waiting does not make
+            # the fleet's embodied carbon cheaper, so the defer arc carries
+            # the same per-region embodied term as the real arcs.
+            h_obj = h_obj + pipe.lam_emb * inst.emb / inst.emb_max[:, None]
         # Same λ_ref history term as the real arcs — the defer arc must be
         # compared apples-to-apples or it is uniformly cheaper and every job
         # waits unconditionally (no temporal signal).
@@ -207,7 +213,10 @@ class SnapshotPricer(Pricer):
                 pipe.lam_co2 * history.co2_ref
                 + pipe.lam_h2o * history.h2o_ref)[None, :]
         defer_cost = h_obj.min(axis=1) + self.defer_margin
-        slack_left = np.array([j.slack_budget_s(now_s) for j in jobs])
+        # ONE vectorized slack expression (problem.slack_budget) shared with
+        # core.slack and the temporal planner — bit-identical to the former
+        # per-job method loop; this runs every scheduling round.
+        slack_left = problem.slack_budget(jobs, now_s)
         can_wait = slack_left > self.defer_slack_s
         return PricedPlan(
             cost=np.concatenate([cost, defer_cost[:, None]], axis=1),
@@ -642,11 +651,14 @@ class PolicyPipeline:
                  lam_co2: float = 0.5, lam_h2o: float = 0.5,
                  lam_ref: float = 0.1, window: int = 10,
                  sigma: float = 10.0, backend: str = "flow",
+                 lam_emb: float = 0.0,
                  record_windows: bool = False):
-        assert abs(lam_co2 + lam_h2o - 1.0) < 1e-9, "weights must sum to 1"
+        assert abs(lam_co2 + lam_h2o + lam_emb - 1.0) < 1e-9, \
+            "footprint weights must sum to 1"
         self.tele = tele
         self.server = server or footprint.m5_metal()
         self.lam_co2, self.lam_h2o, self.lam_ref = lam_co2, lam_h2o, lam_ref
+        self.lam_emb = lam_emb
         self.sigma = sigma
         self.backend = backend
         self.history = HistoryLearner(tele.num_regions, window)
@@ -767,7 +779,8 @@ class PolicyPipeline:
                     cost0 = inst.objective_matrix(self.lam_co2, self.lam_h2o,
                                                   self.lam_ref,
                                                   self.history.co2_ref,
-                                                  self.history.h2o_ref)
+                                                  self.history.h2o_ref,
+                                                  lam_emb=self.lam_emb)
                 res = solvers.solve(cost0, inst.allowed, capacity,
                                     backend=self.backend, soften=True,
                                     overrun=inst.overrun, tol=tol,
@@ -823,14 +836,16 @@ def reactive_pipeline(tele: telemetry.Telemetry, *,
                       sigma: float = 10.0, backend: str = "flow",
                       defer_margin: float = 0.02,
                       defer_slack_s: float = 120.0,
+                      lam_emb: float = 0.0,
                       record_windows: bool = False) -> PolicyPipeline:
     """The paper's myopic co-optimizing controller (Algorithm 1): snapshot
-    pricing + virtual defer arc, hard→soft MILP fallback."""
+    pricing + virtual defer arc, hard→soft MILP fallback. ``lam_emb`` adds
+    the embodied-carbon dimension to the objective (``waterwise-embodied``)."""
     return PolicyPipeline(
         tele, SnapshotPricer(defer_margin, defer_slack_s),
         NextRoundDeferral(), server=server, lam_co2=lam_co2,
         lam_h2o=lam_h2o, lam_ref=lam_ref, window=window, sigma=sigma,
-        backend=backend, record_windows=record_windows)
+        backend=backend, lam_emb=lam_emb, record_windows=record_windows)
 
 
 def forecast_pipeline(tele: telemetry.Telemetry, *,

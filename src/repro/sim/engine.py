@@ -69,6 +69,10 @@ class JobRecord:
     finish_s: float
     carbon_g: float
     water_l: float
+    # Per-region-amortized embodied carbon — a separate accounting column
+    # (``carbon_g`` keeps its original operational+lifetime-share definition
+    # so every pre-existing parity pin holds unchanged).
+    embodied_g: float = 0.0
 
     @property
     def service_s(self) -> float:
@@ -80,6 +84,9 @@ class JobRecord:
 
     @property
     def violated(self) -> bool:
+        if self.job.deadline_override_s is not None:
+            # Workflow task: the binding deadline is the critical-path one.
+            return self.finish_s > self.job.deadline_override_s + 1e-6
         return (self.service_s >
                 (1.0 + self.job.tolerance) * self.job.exec_time_s + 1e-6)
 
@@ -114,6 +121,13 @@ class EngineState:
     applied_events: int             # capacity-event cursor
     cluster: Dict                   # Cluster.export_state() payload
     rounds: int = 0                 # cumulative scheduler rounds so far
+    # Workflow (DAG) carry-over. ``blocked`` holds arrived tasks whose
+    # predecessors have not all finished; ``finished`` maps job_id ->
+    # finish_s for every dispatched job (in-flight finishes included — the
+    # release check compares against the clock, so a finish beyond ``now``
+    # never releases early). Defaults keep pre-DAG states loadable.
+    blocked: List[Job] = dataclasses.field(default_factory=list)
+    finished: Dict[int, float] = dataclasses.field(default_factory=dict)
 
 
 def resolve_scheduler(scheduler, tele):
@@ -167,7 +181,7 @@ class EventSimulator:
             return [], {k: np.zeros(0) for k in
                         ("job_id", "region", "home_region", "start_s",
                          "finish_s", "submit_s", "exec_s", "tolerance",
-                         "carbon_g", "water_l")}
+                         "carbon_g", "water_l", "embodied_g", "deadline_s")}
         te = self.tele
         region = np.fromiter((p[1] for p in placed), np.int64, n)
         start = np.fromiter((p[2] for p in placed), np.float64, n)
@@ -189,6 +203,12 @@ class EventSimulator:
         carbon = footprint.job_carbon(e_eff, t_eff, ci, server)
         water = footprint.job_water(e_eff, t_eff, te.pue[region], ewif, wue,
                                     te.wsf[region], server)
+        servers = np.fromiter((p[0].servers for p in placed), np.float64, n)
+        embodied = footprint.job_embodied(
+            t_eff, server,
+            region_scale=footprint.region_embodied_scale(te.num_regions)[
+                region],
+            servers=servers)
         frame = dict(
             job_id=np.fromiter((p[0].job_id for p in placed), np.int64, n),
             region=region,
@@ -203,10 +223,18 @@ class EventSimulator:
             tolerance=np.fromiter((p[0].tolerance for p in placed),
                                   np.float64, n),
             carbon_g=np.asarray(carbon, np.float64),
-            water_l=np.asarray(water, np.float64))
+            water_l=np.asarray(water, np.float64),
+            embodied_g=np.asarray(embodied, np.float64),
+            # Critical-path deadline (NaN for plain jobs) — lets metrics
+            # compute override-aware violation rates on the frame alone.
+            deadline_s=np.fromiter(
+                (np.nan if p[0].deadline_override_s is None
+                 else p[0].deadline_override_s for p in placed),
+                np.float64, n))
         records = [JobRecord(job, int(nn), float(s), float(f), float(c),
-                             float(w))
-                   for (job, nn, s, f), c, w in zip(placed, carbon, water)]
+                             float(w), float(g))
+                   for (job, nn, s, f), c, w, g in zip(placed, carbon, water,
+                                                       embodied)]
         return records, frame
 
     # -- trace series --------------------------------------------------------
@@ -324,6 +352,8 @@ class EngineStepper:
         self.cluster = Cluster(sim.capacity)
         self.placed: List[Tuple[Job, int, float, float]] = []
         self.pending: List[Job] = []
+        self.blocked: List[Job] = []        # arrived, predecessors unfinished
+        self._finish: Dict[int, float] = {}  # job_id -> finish_s at dispatch
         self.i = 0          # arrival cursor
         self.ce = 0         # capacity-event cursor
         self.now = 0.0
@@ -331,6 +361,8 @@ class EngineStepper:
         if state is not None:
             self.cluster.restore_state(state.cluster)
             self.pending = list(state.pending)
+            self.blocked = list(state.blocked)
+            self._finish = dict(state.finished)
             self.ce = int(state.applied_events)
             self.now = float(state.now)
             self.prior_rounds = int(state.rounds)
@@ -375,6 +407,8 @@ class EngineStepper:
         cap_events = sim.capacity_events
         placed = self.placed
         pending = self.pending
+        blocked = self.blocked
+        finished = self._finish
         i = self.i
         ce = self.ce
         now = self.now
@@ -383,7 +417,7 @@ class EngineStepper:
         hold_grid = self.hold_grid
         n_jobs = len(jobs)
         submit = self._submit
-        while i < n_jobs or pending or cluster.busy_any():
+        while i < n_jobs or pending or blocked or cluster.busy_any():
             if stop_at is not None and now >= stop_at:
                 break
             while ce < len(cap_events) and cap_events[ce][0] <= now:
@@ -395,8 +429,25 @@ class EngineStepper:
                 ce += 1
             cluster.advance(now)
             while i < n_jobs and submit[i] <= now:
-                pending.append(jobs[i])
+                # Precedence routing: a DAG task is not *schedulable* until
+                # every predecessor has finished — it arrives into ``blocked``
+                # and the release pass below moves it to ``pending``. Plain
+                # jobs keep their exact pre-DAG path.
+                (blocked if jobs[i].deps else pending).append(jobs[i])
                 i += 1
+            if blocked:
+                # Release pass: a task becomes schedulable at the first loop
+                # instant at-or-past its last predecessor's finish. Stable
+                # order; identical in batch replay and streaming (same code,
+                # same instants), so DAG parity holds by construction.
+                still: List[Job] = []
+                for job in blocked:
+                    fins = [finished.get(d) for d in job.deps]
+                    if all(f is not None and f <= now + 1e-9 for f in fins):
+                        pending.append(job)
+                    else:
+                        still.append(job)
+                blocked = still
             progressed = False
             if pending:
                 with obs.span("engine.round", now_s=now,
@@ -413,6 +464,7 @@ class EngineStepper:
                         finish = start + job.exec_time_s * job.time_scale
                         cluster.dispatch(n, finish)
                         job.start_time_s, job.finish_time_s = start, finish
+                        finished[job.job_id] = finish
                         placed.append((job, n, start, finish))
                     sp.set(scheduled=len(dec.scheduled),
                            deferred=len(dec.deferred))
@@ -454,6 +506,11 @@ class EngineStepper:
             # ---- jump to the next instant anything can happen -------------
             if pending:
                 now += w                      # next round on the grid
+            elif blocked and cluster.busy_any():
+                # A completion may release a blocked task; releases happen on
+                # the grid, so tick one window (same float accumulation in
+                # batch and stream — parity by construction).
+                now += w
             elif i < n_jobs:
                 nxt = submit[i]
                 if cluster.busy_any():
@@ -493,6 +550,7 @@ class EngineStepper:
             else:
                 break
         self.pending = pending
+        self.blocked = blocked
         self.i = i
         self.ce = ce
         self.now = now
@@ -528,16 +586,26 @@ class EngineStepper:
                       drain_s=cluster.drain_time(),
                       busy_integral_s=cluster.busy_integral_s,
                       cap_integral_s=cluster.cap_integral_s,
-                      unfinished=len(pending) + (len(self.jobs) - self.i))
+                      unfinished=(len(pending) + len(self.blocked)
+                                  + (len(self.jobs) - self.i)))
         if export_state:
             # Arrivals the loop never consumed (all below ``stop_at`` by
-            # slicing) join the carried queue in submit order — exactly the
-            # order the single run would have appended them in.
+            # slicing) join the carried queues in submit order — exactly the
+            # order the single run would have appended them in. DAG-tail
+            # tasks join ``blocked`` (the single run's arrival pop routes
+            # dep-carrying jobs there, and its release pass — which runs
+            # *after* the pop — appends the ready ones to pending after the
+            # plain arrivals), so the restored run reproduces the single
+            # run's queue order exactly.
+            tail = self.jobs[self.i:]
             result["state"] = EngineState(
-                now=now, pending=pending + self.jobs[self.i:],
+                now=now,
+                pending=pending + [j for j in tail if not j.deps],
                 applied_events=self.ce,
                 cluster=cluster.export_state(),
-                rounds=rounds)
+                rounds=rounds,
+                blocked=self.blocked + [j for j in tail if j.deps],
+                finished=dict(self._finish))
         return result
 
 
@@ -574,7 +642,12 @@ class WindowedSimulator:
         carbon = float(footprint.job_carbon(e_eff, t_eff, ci, server))
         water = float(footprint.job_water(e_eff, t_eff, te.pue[region], ewif,
                                           wue, te.wsf[region], server))
-        return carbon, water
+        embodied = float(footprint.job_embodied(
+            t_eff, server,
+            region_scale=float(
+                footprint.region_embodied_scale(te.num_regions)[region]),
+            servers=job.servers))
+        return carbon, water, embodied
 
     # -- main loop -----------------------------------------------------------
 
@@ -608,9 +681,9 @@ class WindowedSimulator:
                     finish = start + job.exec_time_s * job.time_scale
                     cluster.dispatch(n, finish)
                     job.start_time_s, job.finish_time_s = start, finish
-                    carbon, water = self._account(job, n, start)
+                    carbon, water, embodied = self._account(job, n, start)
                     records.append(JobRecord(job, n, start, finish, carbon,
-                                             water))
+                                             water, embodied))
                 pending = list(dec.deferred)
                 rounds += 1
             windows += 1

@@ -8,7 +8,8 @@ import numpy as np
 
 
 def _empty_summary(result: Dict) -> Dict[str, float]:
-    return dict(carbon_kg=0.0, water_kl=0.0, mean_service_ratio=1.0,
+    return dict(carbon_kg=0.0, water_kl=0.0, embodied_kg=0.0,
+                mean_service_ratio=1.0,
                 violation_pct=0.0, jobs=0, mean_solve_ms=0.0,
                 p99_service_ratio=1.0, moved_pct=0.0,
                 utilization=result.get("utilization", 0.0))
@@ -31,10 +32,19 @@ def summarize(result: Dict) -> Dict[str, float]:
         ratios = service / np.maximum(frame["exec_s"], 1e-9)
         violated = service > ((1.0 + frame["tolerance"]) * frame["exec_s"]
                               + 1e-6)
+        deadline = frame.get("deadline_s")
+        if deadline is not None and deadline.size:
+            # Workflow tasks carry an absolute critical-path deadline
+            # (NaN = plain job, which keeps the tolerance-based test).
+            violated = np.where(np.isnan(deadline), violated,
+                                frame["finish_s"] > deadline + 1e-6)
         moved = frame["region"] != frame["home_region"]
         st = result["solve_times"]
+        embodied = frame.get("embodied_g")
         return dict(carbon_kg=float(np.sum(frame["carbon_g"]) / 1e3),
                     water_kl=float(np.sum(frame["water_l"]) / 1e3),
+                    embodied_kg=(float(np.sum(embodied) / 1e3)
+                                 if embodied is not None else 0.0),
                     mean_service_ratio=float(ratios.mean()),
                     p99_service_ratio=float(np.percentile(ratios, 99)),
                     violation_pct=float(np.mean(violated) * 100.0),
@@ -47,11 +57,13 @@ def summarize(result: Dict) -> Dict[str, float]:
         return _empty_summary(result)
     carbon = sum(r.carbon_g for r in recs) / 1e3
     water = sum(r.water_l for r in recs) / 1e3
+    embodied = sum(r.embodied_g for r in recs) / 1e3
     ratios = np.array([r.service_ratio for r in recs])
     viol = np.mean([r.violated for r in recs]) * 100.0
     moved = np.mean([r.region != r.job.home_region for r in recs]) * 100.0
     st = result["solve_times"]
     return dict(carbon_kg=float(carbon), water_kl=float(water),
+                embodied_kg=float(embodied),
                 mean_service_ratio=float(ratios.mean()),
                 p99_service_ratio=float(np.percentile(ratios, 99)),
                 violation_pct=float(viol), jobs=len(recs),

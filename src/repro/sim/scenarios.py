@@ -335,6 +335,83 @@ def _heat_derate(days, seed, jobs_per_day, utilization, **kw):
                                capacity_events=events)
 
 
+@register("regime-shift",
+          "Telemetry regime shift: mid-trace step change flips the CI "
+          "ranking (cleanest grid x2.2, dirtiest /2.2) and raises the "
+          "shifted region's WUE — commit-at-admission plans go stale, "
+          "receding-horizon re-planning wins")
+def _regime_shift(days, seed, jobs_per_day, utilization, *,
+                  onset_frac: float = 0.5, ci_flip: float = 2.2,
+                  wue_step: float = 1.35, **kw):
+    inst = _base(days, seed, jobs_per_day, utilization, **kw)
+    tele = inst.tele
+    onset = int(days * 24.0 * onset_frac)
+    # The step persists through the simulated horizon (plus the pricing
+    # lookahead) but NOT through the rest of the telemetry array: warm-start
+    # forecaster archives are the array's cyclic extension, so a step that
+    # ran to the end of the array would dominate the wrapped history and the
+    # forecaster would "know" the shift before it happens — exactly the
+    # staleness this scenario exists to create. Keeping the tail unshifted
+    # keeps the shift unforecastable.
+    end = min(int(np.ceil(days * 24.0)) + 8, tele.num_hours)
+    green = int(np.argmin(tele.ci.mean(axis=0)))
+    dirty = int(np.argmax(tele.ci.mean(axis=0)))
+    ci = tele.ci.copy()
+    wue = tele.wue.copy()
+    ci[onset:end, green] *= ci_flip
+    ci[onset:end, dirty] /= ci_flip
+    wue[onset:end, green] *= wue_step
+    # Telemetry memoizes cumulative integrals (_cum_cache) — never mutate
+    # in place; replace() builds a fresh instance with fresh caches.
+    tele = dataclasses.replace(tele, ci=ci, wue=wue)
+    return dataclasses.replace(inst, name="regime-shift", tele=tele)
+
+
+# Average tasks per workflow under ``repro.workflows.generators.TEMPLATES``
+# (chain/fanout/diamond/montage mix) — converts the shared ``jobs_per_day``
+# cell param (which counts *tasks*, like every other scenario) into the
+# generator's workflow arrival rate.
+_TASKS_PER_WORKFLOW = 6.7
+
+
+def _workflow_base(days, seed, jobs_per_day, utilization, *,
+                   tolerance: float = 0.5, ewif_table: str = "macknick",
+                   burst: float = 0.0, name: str = "workflow-diurnal"
+                   ) -> ScenarioInstance:
+    from repro.workflows import generators
+    tele = telemetry.generate(days=max(int(np.ceil(days)) + 1, 2), seed=seed,
+                              ewif_table=ewif_table)
+    jobs = generators.workflow_trace(
+        days=days, seed=seed, num_regions=tele.num_regions,
+        tolerance=tolerance,
+        workflows_per_day=jobs_per_day / _TASKS_PER_WORKFLOW, burst=burst)
+    cap = scale_capacity_for_utilization(jobs, days, tele.num_regions,
+                                         utilization)
+    return ScenarioInstance(name=name, tele=tele, jobs=jobs, capacity=cap)
+
+
+@register("workflow-diurnal",
+          "Precedence-constrained DAG trace (chain/fan-out/diamond/Montage "
+          "mix) with diurnal arrivals; jobs_per_day counts tasks")
+def _workflow_diurnal(days, seed, jobs_per_day, utilization, *,
+                      tolerance: float = 0.5, ewif_table: str = "macknick"):
+    return _workflow_base(days, seed, jobs_per_day, utilization,
+                          tolerance=tolerance, ewif_table=ewif_table,
+                          name="workflow-diurnal")
+
+
+@register("workflow-burst",
+          "DAG trace with burst-train arrivals (Alibaba-like hot windows): "
+          "whole workflows co-arrive, stressing precedence release under "
+          "queue pressure")
+def _workflow_burst(days, seed, jobs_per_day, utilization, *,
+                    tolerance: float = 0.5, ewif_table: str = "macknick",
+                    burst: float = 0.5):
+    return _workflow_base(days, seed, jobs_per_day, utilization,
+                          tolerance=tolerance, ewif_table=ewif_table,
+                          burst=burst, name="workflow-burst")
+
+
 def register_csv_scenario(name: str, path: str, *,
                           column_map: Optional[Dict] = None,
                           unit_scale: Optional[Dict] = None,

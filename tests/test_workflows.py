@@ -1,0 +1,267 @@
+"""repro.workflows: DAG model, critical-path slack, precedence release.
+
+Property tests (hypothesis) pin the three contracts the subsystem is built
+on: generated task graphs are acyclic and topologically consistent; the
+critical-path deadline never lets the Eq (11) mask admit an arc the task
+cannot finish behind; and the engine never starts a task before every
+predecessor has finished — in batch replay and in the streamed decision
+loop, which must agree bit for bit."""
+import copy
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import footprint, problem, telemetry
+from repro.sim.engine import EventSimulator, SimConfig
+from repro.sim.scenarios import get_scenario
+from repro.workflows import (CycleError, WorkflowSpec, assign_deadlines,
+                             critical_path_s, longest_path_to_sink,
+                             precedence_violations, workflow_miss_rate,
+                             workflow_trace)
+from repro.workflows.cpath import edges_from_deps, topological_order
+
+_TELE = None
+
+
+def _tele():
+    global _TELE
+    if _TELE is None:
+        _TELE = telemetry.generate(days=1, seed=0)
+    return _TELE
+
+
+def _task(job_id, deps=(), exec_s=100.0, submit=0.0, deadline=None):
+    return problem.Job(job_id=job_id, home_region=0, submit_time_s=submit,
+                       exec_time_s=exec_s, energy_kwh=0.5, tolerance=0.5,
+                       deps=tuple(deps), deadline_override_s=deadline)
+
+
+# ---------------------------------------------------------------------------
+# Critical-path math: exact pins on the diamond
+# ---------------------------------------------------------------------------
+
+def test_diamond_longest_path_and_deadlines():
+    #   0 -> 1 -> 3,  0 -> 2 -> 3;  exec = [10, 20, 15, 10]
+    exec_s = np.array([10.0, 20.0, 15.0, 10.0])
+    edges = np.array([[0, 1], [0, 2], [1, 3], [2, 3]])
+    L = longest_path_to_sink(exec_s, edges)
+    assert L.tolist() == [40.0, 30.0, 25.0, 10.0]
+    assert critical_path_s(exec_s, edges) == 40.0
+    dl, wf = assign_deadlines(exec_s, edges, submit_s=0.0, tolerance=0.5)
+    assert wf == 60.0                        # (1 + 0.5) * 40
+    assert dl.tolist() == [30.0, 50.0, 50.0, 60.0]
+
+
+def test_single_task_degenerates_to_plain_deadline():
+    """A 1-node workflow's critical-path deadline equals the plain-job
+    deadline — DAG semantics are a strict extension."""
+    dl, wf = assign_deadlines(np.array([200.0]), np.zeros((0, 2), np.int64),
+                              submit_s=50.0, tolerance=0.25)
+    plain = _task(0, submit=50.0, exec_s=200.0)
+    plain = problem.Job(**{**plain.__dict__, "tolerance": 0.25})
+    assert dl[0] == wf == plain.deadline_s
+
+
+def test_cycle_raises():
+    with pytest.raises(CycleError):
+        WorkflowSpec(workflow_id=0,
+                     tasks=(_task(0, deps=(1,)), _task(1, deps=(0,))))
+
+
+def test_unknown_dep_raises():
+    with pytest.raises(CycleError):
+        edges_from_deps([0, 1], [(), (7,)])
+
+
+@given(st.data())
+@settings(max_examples=60, deadline=None)
+def test_random_dags_acyclic_and_topo_consistent(data):
+    """Graphs built by drawing predecessors from earlier nodes are acyclic
+    by construction; the layered depths must order every edge and the topo
+    permutation must be a valid linearization."""
+    n = data.draw(st.integers(2, 12))
+    deps = [tuple(data.draw(st.sets(st.integers(0, i - 1), max_size=3)))
+            if i else () for i in range(n)]
+    edges = edges_from_deps(list(range(n)), deps)
+    order = topological_order(n, edges)
+    assert sorted(order.tolist()) == list(range(n))
+    pos = np.empty(n, np.int64)
+    pos[order] = np.arange(n)
+    for u, v in edges:
+        assert pos[u] < pos[v]
+    exec_s = np.full(n, 10.0)
+    L = longest_path_to_sink(exec_s, edges)
+    for u, v in edges:
+        assert L[u] >= exec_s[u] + L[v]      # longest-path Bellman condition
+
+
+@given(seed=st.integers(0, 30))
+@settings(max_examples=20, deadline=None)
+def test_generated_traces_are_valid_workflows(seed):
+    jobs = workflow_trace(days=0.05, seed=seed, workflows_per_day=300.0)
+    assert jobs, "generator produced an empty trace"
+    by_wf = {}
+    for j in jobs:
+        assert j.workflow_id is not None
+        assert j.deadline_override_s is not None
+        by_wf.setdefault(j.workflow_id, []).append(j)
+    ids = {j.job_id for j in jobs}
+    assert len(ids) == len(jobs)
+    for tasks in by_wf.values():
+        # Deps stay inside the workflow; re-validating never raises.
+        task_ids = {t.job_id for t in tasks}
+        assert all(d in task_ids for t in tasks for d in t.deps)
+        WorkflowSpec(workflow_id=tasks[0].workflow_id,
+                     tasks=tuple(tasks))
+
+
+def test_generator_deterministic():
+    a = workflow_trace(days=0.05, seed=7, workflows_per_day=200.0)
+    b = workflow_trace(days=0.05, seed=7, workflows_per_day=200.0)
+    assert [(j.job_id, j.submit_time_s, j.exec_time_s, j.deps,
+             j.deadline_override_s) for j in a] \
+        == [(j.job_id, j.submit_time_s, j.exec_time_s, j.deps,
+             j.deadline_override_s) for j in b]
+
+
+# ---------------------------------------------------------------------------
+# Shared slack definition: vectorized == scalar, and Eq (11) feasibility
+# ---------------------------------------------------------------------------
+
+def test_slack_budget_vector_matches_scalar_exactly():
+    jobs = [_task(0, exec_s=300.0, submit=10.0),
+            _task(1, exec_s=100.0, submit=0.0, deadline=900.0),
+            _task(2, exec_s=50.0, submit=200.0),
+            _task(3, exec_s=700.0, submit=40.0, deadline=5000.0)]
+    for now in (0.0, 55.0, 123.456, 4000.0):
+        vec = problem.slack_budget(jobs, now)
+        for j, v in zip(jobs, vec):
+            assert v == j.slack_budget_s(now)        # bitwise, not approx
+
+
+@given(data=st.data())
+@settings(max_examples=40, deadline=None)
+def test_mask_never_admits_infeasible_override_arc(data):
+    """Eq (11) through the critical-path slack: if ``allowed[i, r]`` then
+    starting task i in region r *now* (after the transfer) still meets its
+    absolute deadline. The deferral queue and the solver mask both read
+    this arc filter, so this is the no-missed-deadline-by-construction
+    invariant."""
+    now = data.draw(st.floats(0.0, 5000.0))
+    n = data.draw(st.integers(1, 8))
+    jobs = []
+    for i in range(n):
+        exec_s = data.draw(st.floats(10.0, 2000.0))
+        submit = data.draw(st.floats(0.0, now)) if now else 0.0
+        slack = data.draw(st.floats(-500.0, 5000.0))
+        jobs.append(problem.Job(
+            job_id=i, home_region=data.draw(st.integers(0, 4)),
+            submit_time_s=submit, exec_time_s=exec_s, energy_kwh=1.0,
+            tolerance=0.5, deadline_override_s=now + exec_s + slack))
+    tele = _tele()
+    inst = problem.build(jobs, tele, now, np.full(tele.num_regions, 4),
+                         footprint.m5_metal())
+    for i, j in enumerate(jobs):
+        for r in range(tele.num_regions):
+            if inst.allowed[i, r]:
+                finish = now + inst.latency[i, r] + j.exec_time_s
+                assert finish <= j.deadline_override_s \
+                    + 1e-12 * j.exec_time_s + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Engine precedence release: batch, stream, and their bit parity
+# ---------------------------------------------------------------------------
+
+def _dag_cell(days=0.04, seed=2, jobs_per_day=3000.0):
+    return get_scenario("workflow-diurnal").build(days, seed, jobs_per_day,
+                                                  0.15)
+
+
+@given(seed=st.integers(0, 12))
+@settings(max_examples=8, deadline=None)
+def test_engine_never_violates_precedence(seed):
+    inst = _dag_cell(seed=seed)
+    res = EventSimulator(inst.tele, inst.capacity, SimConfig()).run(
+        copy.deepcopy(inst.jobs), "waterwise")
+    assert res["unfinished"] == 0
+    assert precedence_violations(res["records"]) == 0
+
+
+def test_stream_matches_batch_bit_for_bit():
+    from repro.policy.pipeline import forecast_pipeline
+    from repro.serve import DecisionLoop, ReplayArrivals, ServeConfig
+
+    inst = _dag_cell(days=0.05, seed=1)
+
+    def pipe():
+        return forecast_pipeline(inst.tele, forecaster="oracle", risk=0.0,
+                                 defer_eps=1e-4, backend="fused")
+
+    days = 0.05
+    batch = EventSimulator(inst.tele, inst.capacity, SimConfig()).run(
+        copy.deepcopy(inst.jobs), pipe())
+    sim = EventSimulator(inst.tele, inst.capacity, SimConfig())
+    loop = DecisionLoop(sim, pipe(), ReplayArrivals(copy.deepcopy(inst.jobs)),
+                        ServeConfig(round_s=300.0, queue_bound=1 << 30))
+    loop.run(days * 86400.0)
+    stream = loop.stepper.result()
+
+    key = lambda r: (r.job.job_id, r.region, r.start_s, r.finish_s,
+                     r.carbon_g, r.water_l, r.embodied_g)
+    assert [key(r) for r in batch["records"]] \
+        == [key(r) for r in stream["records"]]
+    assert precedence_violations(batch["records"]) == 0
+    assert precedence_violations(stream["records"]) == 0
+
+
+def test_plain_jobs_unaffected_by_dag_machinery():
+    """A depless trace routes entirely through the pre-DAG pending path —
+    same records as ever (covered in depth by test_engine golden parity);
+    here: the blocked queue stays unused and no overrides appear."""
+    from repro.sim import borg_trace
+    from repro.sim.trace import scale_capacity_for_utilization
+
+    jobs = borg_trace(days=0.03, seed=5, tolerance=0.5)
+    cap = scale_capacity_for_utilization(jobs, 0.03, 5, utilization=0.15)
+    res = EventSimulator(_tele(), cap, SimConfig()).run(
+        copy.deepcopy(jobs), "waterwise")
+    assert all(r.job.deadline_override_s is None for r in res["records"])
+    assert np.isnan(res["frame"]["deadline_s"]).all()
+
+
+# ---------------------------------------------------------------------------
+# Accounting: embodied column + workflow metrics
+# ---------------------------------------------------------------------------
+
+def test_embodied_column_matches_closed_form():
+    from repro.sim import metrics
+
+    inst = _dag_cell()
+    res = EventSimulator(inst.tele, inst.capacity, SimConfig()).run(
+        copy.deepcopy(inst.jobs), "waterwise")
+    server = footprint.m5_metal()
+    scale = footprint.region_embodied_scale(inst.tele.num_regions)
+    for r in res["records"][:50]:
+        expect = footprint.job_embodied(r.finish_s - r.start_s, server,
+                                        region_scale=scale[r.region],
+                                        servers=r.job.servers)
+        assert r.embodied_g == pytest.approx(expect, rel=1e-9)
+    s = metrics.summarize(res)
+    assert s["embodied_kg"] == pytest.approx(
+        sum(r.embodied_g for r in res["records"]) / 1e3, rel=1e-9)
+    miss, n_wf = workflow_miss_rate(res["records"])
+    assert n_wf > 0 and 0.0 <= miss <= 1.0
+
+
+def test_waterwise_embodied_registered():
+    from repro.policy.registry import get_policy
+
+    spec = get_policy("waterwise-embodied")
+    assert "lam_embodied" in spec.params
+    inst = _dag_cell(days=0.03)
+    res = EventSimulator(inst.tele, inst.capacity, SimConfig()).run(
+        copy.deepcopy(inst.jobs), "waterwise-embodied[lam_embodied=0.35]")
+    assert res["unfinished"] == 0
+    assert precedence_violations(res["records"]) == 0
