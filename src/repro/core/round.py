@@ -70,15 +70,17 @@ import repro.obs as obs
 from repro.core import footprint, problem, solvers
 from repro.core.solvers import jax_solver
 from repro.core.solvers.jax_solver import BIG, _NEG, bucket_for
+from repro.runtime import platform as runtime_platform
 
-__all__ = ["fused_solve", "fused_temporal_round", "sinkhorn_impl_default",
-           "SinkhornWarmStart"]
+__all__ = ["fused_solve", "fused_temporal_round", "fused_round_batch",
+           "sinkhorn_impl_default", "SinkhornWarmStart", "SolveRequest",
+           "group_requests"]
 
 
 def sinkhorn_impl_default() -> str:
     """``pallas`` on TPU (the fused row/col-reduction kernel), ``xla``
     elsewhere (interpret-mode Pallas is a validation path, not a fast one)."""
-    return "pallas" if jax.devices()[0].platform == "tpu" else "xla"
+    return "pallas" if runtime_platform.on_tpu() else "xla"
 
 
 def _pad_rows(rows: int):
@@ -99,7 +101,7 @@ def _pad0(x, pad: int, value=0):
 def _interpret(impl: str, interpret: Optional[bool]) -> bool:
     if interpret is not None:
         return bool(interpret)
-    return impl == "pallas" and jax.devices()[0].platform != "tpu"
+    return impl == "pallas" and not runtime_platform.on_tpu()
 
 
 # ---------------------------------------------------------------------------
@@ -173,19 +175,22 @@ def _solve_core(c_eff, mask, cap, valid, *, impl: str, eps0: float,
 # Program 1: the fused assignment solve (solver backend "fused")
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=(
-    "soften", "sigma", "impl", "eps0", "eps_min", "iters", "anneal_stages",
-    "interpret"))
-def _assignment_program(arcs, tolv, cap, *, soften: bool, sigma: float,
-                        impl: str, eps0: float = 0.5, eps_min: float = 0.005,
-                        iters: int = 60, anneal_stages: int = 6,
-                        interpret: bool = False):
+def _assignment_body(arcs, tolv, cap, *, soften: bool, sigma: float,
+                     impl: str, eps0: float = 0.5, eps_min: float = 0.005,
+                     iters: int = 60, anneal_stages: int = 6,
+                     interpret: bool = False):
     """Soft-cost folding + masking + prepare + Sinkhorn + extraction as one
     XLA computation (the device half of the ``"fused"`` backend).
 
     ``arcs`` packs [cost | allowed(0/1) | overrun] as one [3, Mb, C] upload;
     ``tolv`` packs [tol | row-validity] as [Mb, 2] — bucket-padded, with the
     true job count implied by the validity column.
+
+    Unjitted on purpose: the single-cell program jits it directly
+    (``_assignment_program``) and the device-parallel batch path vmaps /
+    shard_maps the *same traced body* over a leading cell axis
+    (``fused_round_batch``) — per-cell results are bitwise identical by
+    construction (pinned in tests/test_device_executor.py).
     """
     cost, allowed, overrun = arcs[0], arcs[1] > 0.5, arcs[2]
     tol, valid = tolv[:, 0], tolv[:, 1] > 0.5
@@ -200,6 +205,11 @@ def _assignment_program(arcs, tolv, cap, *, soften: bool, sigma: float,
                            eps_min=eps_min, iters=iters,
                            anneal_stages=anneal_stages, interpret=interpret)
     return Cn, X
+
+
+_assignment_program = functools.partial(jax.jit, static_argnames=(
+    "soften", "sigma", "impl", "eps0", "eps_min", "iters", "anneal_stages",
+    "interpret"))(_assignment_body)
 
 
 @solvers.register("fused")
@@ -259,6 +269,183 @@ def _infeasible(M: int) -> solvers.SolveResult:
     res = jax_solver._infeasible(M)
     res.backend = "fused"
     return res
+
+
+# ---------------------------------------------------------------------------
+# Program 1b: the device-parallel batched assignment solve
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SolveRequest:
+    """One cell's assignment-round solve, queued for device-parallel
+    batching (``fused_round_batch``). Fields mirror ``fused_solve``'s
+    signature — a request is exactly one deferred call."""
+    cost: np.ndarray                       # [M, C]
+    allowed: np.ndarray                    # [M, C]
+    capacity: np.ndarray                   # [C]
+    soften: bool = False
+    overrun: Optional[np.ndarray] = None
+    tol: Optional[np.ndarray] = None
+    sigma: float = 10.0
+    eps_min: float = 0.005
+    sinkhorn_impl: Optional[str] = None
+    interpret: Optional[bool] = None
+
+
+def group_requests(requests) -> dict:
+    """Group request *indices* by compile signature: (row bucket, columns,
+    cost dtype, soften, sigma, impl, eps_min, interpret).
+
+    Pure bookkeeping (property-tested): a group never mixes row buckets,
+    column counts, dtypes, or solver statics — each group maps onto exactly
+    one compiled batch program, and one compile serves every batch that
+    shares the signature.
+    """
+    groups: dict = {}
+    for i, r in enumerate(requests):
+        M, C = np.asarray(r.cost).shape
+        key = (bucket_for(M + 1), C, np.dtype(np.asarray(r.cost).dtype).str,
+               bool(r.soften), float(r.sigma), r.sinkhorn_impl,
+               float(r.eps_min), r.interpret)
+        groups.setdefault(key, []).append(i)
+    return groups
+
+
+def _request_statics(req: SolveRequest) -> dict:
+    """The resolved static (compile-time) solver constants of one request —
+    identical across a group by construction of the group key."""
+    impl = req.sinkhorn_impl or sinkhorn_impl_default()
+    return dict(soften=bool(req.soften), sigma=float(req.sigma), impl=impl,
+                eps_min=float(req.eps_min),
+                interpret=_interpret(impl, req.interpret))
+
+
+@functools.lru_cache(maxsize=None)
+def _batch_callable(devices: int, *, soften: bool, sigma: float, impl: str,
+                    eps_min: float, interpret: bool):
+    """The compiled device-parallel batch program for one static signature:
+    ``vmap`` of the single-cell ``_assignment_body`` over a leading cell
+    axis, ``shard_map``-split across ``devices`` XLA devices when more than
+    one is available. Cached per (devices, statics) — jitted shapes cache
+    underneath as usual."""
+    one = functools.partial(_assignment_body, soften=soften, sigma=sigma,
+                            impl=impl, eps_min=eps_min, interpret=interpret)
+    fn = jax.vmap(one)
+    if devices > 1:
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import Mesh
+        from jax.sharding import PartitionSpec as P
+        mesh = Mesh(np.asarray(jax.devices()[:devices]), ("cells",))
+        fn = shard_map(fn, mesh=mesh,
+                       in_specs=(P("cells"), P("cells"), P("cells")),
+                       out_specs=(P("cells"), P("cells")), check_rep=False)
+    return jax.jit(fn)
+
+
+def _batch_size(n: int, devices: int) -> int:
+    """Compiled batch size for ``n`` cells: next power of two per device
+    shard × the device count, so jittery group sizes reuse a handful of
+    compiled batch shapes (the cell-axis analogue of the row buckets)."""
+    per = -(-n // devices)
+    p = 1
+    while p < per:
+        p *= 2
+    return devices * p
+
+
+def fused_round_batch(requests, devices: int = 1) -> list:
+    """Solve many independent cells' assignment rounds as device-parallel
+    jitted programs — ONE dispatch per (bucket, dtype, statics) group
+    instead of one per cell.
+
+    The batch path vmaps (and, with ``devices > 1``, shard_maps over a
+    host-device mesh) the exact traced body the single-cell ``"fused"``
+    backend jits, with identical per-cell bucket padding — so every cell's
+    normalized costs and transport plan are **bitwise identical** to a
+    per-cell ``fused_solve`` call (pinned in tests/test_device_executor.py),
+    and the host-side vertex rounding consumes identical inputs. Groups are
+    padded to ``_batch_size`` by repeating the last cell (results sliced
+    off), keeping compiled batch shapes few and device shards equal-sized.
+
+    Returns ``SolveResult``s in request order; per-request infeasibility
+    (capacity shortfall / fully masked row) short-circuits exactly like
+    ``fused_solve``. ``obs`` counters: ``round.batch_compile`` counts fresh
+    program compiles (retrace accounting for the bench gate),
+    ``round.batch_solves`` counts cells served.
+    """
+    devices = max(1, int(devices))
+    n_avail = len(jax.devices())
+    if devices > n_avail:
+        raise ValueError(f"devices={devices} exceeds the {n_avail} "
+                         f"available XLA device(s)")
+    results: list = [None] * len(requests)
+    live: list = []
+    for i, r in enumerate(requests):
+        M, C = r.cost.shape
+        cap = np.asarray(r.capacity).astype(np.int64)
+        allowed = np.asarray(r.allowed, bool)
+        if int(cap.sum()) < M or \
+                not (r.soften or allowed.any(axis=1).all()):
+            results[i] = _infeasible(M)
+        else:
+            live.append(i)
+    if not live:
+        return results
+    groups = group_requests([requests[i] for i in live])
+    with obs.timed("solver.round_batch", requests=len(requests),
+                   groups=len(groups), devices=devices) as t:
+        for key, local in groups.items():
+            idxs = [live[j] for j in local]
+            bucket = key[0]
+            statics = _request_statics(requests[idxs[0]])
+            arcs_l, tolv_l, cap_l = [], [], []
+            for i in idxs:
+                r = requests[i]
+                M, C = r.cost.shape
+                pad = bucket - 1 - M
+                arcs_l.append(np.stack([
+                    _pad0(r.cost, pad),
+                    _pad0(np.asarray(r.allowed).astype(np.float64), pad),
+                    _pad0(r.overrun if r.overrun is not None
+                          else np.zeros((M, C)), pad)]).astype(np.float32))
+                tolv_l.append(np.stack([
+                    _pad0(r.tol if r.tol is not None else np.zeros(M), pad),
+                    _pad0(np.ones(M), pad)], axis=1).astype(np.float32))
+                cap_l.append(np.asarray(r.capacity).astype(np.int64)
+                             .astype(np.float32))
+            B = len(idxs)
+            for _ in range(_batch_size(B, devices) - B):
+                arcs_l.append(arcs_l[-1])
+                tolv_l.append(tolv_l[-1])
+                cap_l.append(cap_l[-1])
+            fn = _batch_callable(devices, **statics)
+            before = fn._cache_size()
+            out = fn(jnp.asarray(np.stack(arcs_l)),
+                     jnp.asarray(np.stack(tolv_l)),
+                     jnp.asarray(np.stack(cap_l)))
+            compiles = fn._cache_size() - before
+            if compiles:
+                obs.counter("round.batch_compile", compiles)
+            Cnb, Xb = jax.device_get(out)
+            for b, i in enumerate(idxs):
+                r = requests[i]
+                M = r.cost.shape[0]
+                cap = np.asarray(r.capacity).astype(np.int64)
+                c_eff, mask = jax_solver._effective(
+                    np.asarray(r.cost, np.float64),
+                    np.asarray(r.allowed, bool), r.soften, r.overrun,
+                    r.tol, r.sigma)
+                res = jax_solver._finalize(
+                    np.asarray(Xb[b][:M], np.float64),
+                    np.asarray(Cnb[b][:M], np.float64), c_eff, mask, cap,
+                    r.soften, r.overrun, r.tol)
+                res.backend = "fused"
+                results[i] = res
+        obs.counter("round.batch_solves", len(live))
+    per = t.elapsed_s / max(len(requests), 1)
+    for r in results:
+        r.solve_time_s = per
+    return results
 
 
 # ---------------------------------------------------------------------------

@@ -26,7 +26,9 @@ All backends consume a cost matrix + arc filter + capacities and return a
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import threading
 from typing import Callable, Dict, Optional
 
 import numpy as np
@@ -104,16 +106,49 @@ def available_backends() -> list:
     return sorted(_REGISTRY)
 
 
+# Thread-local solve interception: a batching driver (the ``device``
+# executor) installs a per-thread hook around a cell's whole run; every
+# ``solve()`` the cell issues is offered to the hook first, which may
+# return a SolveResult computed elsewhere (e.g. a device-parallel batch
+# shared with other cells' threads) or ``None`` to decline — declined
+# solves run the normal backend in-thread. Thread-local by design: cells
+# running concurrently each carry their own hook, and code outside an
+# ``intercepted`` block is never affected.
+_LOCAL = threading.local()
+
+
+@contextlib.contextmanager
+def intercepted(hook: Callable):
+    """Install ``hook(cost, allowed, capacity, *, backend, soften, overrun,
+    tol, sigma) -> Optional[SolveResult]`` for ``solve()`` calls on the
+    current thread. Nests: the innermost hook wins; ``None`` restores."""
+    prev = getattr(_LOCAL, "hook", None)
+    _LOCAL.hook = hook
+    try:
+        yield
+    finally:
+        _LOCAL.hook = prev
+
+
 def solve(cost: np.ndarray, allowed: np.ndarray, capacity: np.ndarray,
           *, backend: str = "scipy", soften: bool = False,
           overrun: Optional[np.ndarray] = None,
           tol: Optional[np.ndarray] = None, sigma: float = 10.0) -> SolveResult:
     """Unified entry point. See module docstring."""
+    cost = np.asarray(cost, dtype=np.float64)
+    allowed = np.asarray(allowed, bool)
+    capacity = np.asarray(capacity)
+    overrun = None if overrun is None else np.asarray(overrun)
+    tol = None if tol is None else np.asarray(tol)
+    hook = getattr(_LOCAL, "hook", None)
+    if hook is not None:
+        res = hook(cost, allowed, capacity, backend=backend, soften=soften,
+                   overrun=overrun, tol=tol, sigma=sigma)
+        if res is not None:
+            return res
     fn = get_solver(backend)
-    return fn(np.asarray(cost, dtype=np.float64), np.asarray(allowed, bool),
-              np.asarray(capacity), soften=soften,
-              overrun=None if overrun is None else np.asarray(overrun),
-              tol=None if tol is None else np.asarray(tol), sigma=sigma)
+    return fn(cost, allowed, capacity, soften=soften, overrun=overrun,
+              tol=tol, sigma=sigma)
 
 
 def solve_many(costs, alloweds, capacities, *, backend: str = "jax",

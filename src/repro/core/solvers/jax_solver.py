@@ -38,8 +38,10 @@ _NEG = -1e9        # log-domain mask value / zero-mass row marginal
 # Row-count buckets: cost matrices are padded up to the next bucket (with
 # zero-mass rows) before hitting the jitted Sinkhorn, so a whole simulation
 # run — thousands of scheduling rounds with jittery window sizes — compiles
-# the solver once per bucket instead of once per distinct M.
-BUCKETS = (4, 8, 16, 32, 64, 128, 256, 512, 1024, 2048, 4096)
+# the solver once per bucket instead of once per distinct M. Extends through
+# 16384 so the 1M-jobs/day storm regime (multi-thousand-row admission
+# windows) stays on tabled buckets instead of the ad-hoc overflow path.
+BUCKETS = (4, 8, 16, 32, 64, 128, 256, 512, 1024, 2048, 4096, 8192, 16384)
 
 # The annealed-Sinkhorn schedule baked into ``sinkhorn_log``'s defaults;
 # solver spans annotate these so traces record the effective iteration
@@ -47,6 +49,13 @@ BUCKETS = (4, 8, 16, 32, 64, 128, 256, 512, 1024, 2048, 4096)
 SINKHORN_EPS0 = 0.5
 SINKHORN_ITERS = 60
 SINKHORN_STAGES = 6
+
+
+# Ad-hoc overflow bucket sizes already warned about: the overflow warning
+# fires once per *size*, not once per solve — a storm that overflows into
+# bucket 32768 ten thousand times is one actionable signal, not ten
+# thousand identical RuntimeWarnings.
+_OVERFLOW_WARNED: set = set()
 
 
 def bucket_for(rows: int) -> int:
@@ -57,10 +66,12 @@ def bucket_for(rows: int) -> int:
     b = BUCKETS[-1]
     while b < rows:
         b *= 2
-    obs.warn("solver.bucket_overflow",
-             f"instance with {rows} rows exceeds the largest padded bucket "
-             f"{BUCKETS[-1]}; falling back to ad-hoc bucket {b} "
-             f"(fresh JIT compile per new size)")
+    if b not in _OVERFLOW_WARNED:
+        _OVERFLOW_WARNED.add(b)
+        obs.warn("solver.bucket_overflow",
+                 f"instance with {rows} rows exceeds the largest padded "
+                 f"bucket {BUCKETS[-1]}; falling back to ad-hoc bucket {b} "
+                 f"(fresh JIT compile per new size)")
     return b
 
 

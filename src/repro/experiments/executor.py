@@ -1,4 +1,4 @@
-"""ONE ``Executor`` abstraction, three interchangeable backends.
+"""ONE ``Executor`` abstraction, four interchangeable backends.
 
 Every backend maps a list of experiment cells to tidy rows with identical
 values — the backend choice is an operational knob (latency, parallelism,
@@ -10,6 +10,13 @@ scale), never a semantic one (pinned by parity tests):
 * ``sharded``  — splits each *single* cell's trace by arrival time across
   worker processes with engine-state handoff + boundary stitching
   (``repro.experiments.shard``); the scale-out path for 1M+-job cells.
+* ``device``   — runs many cells' scheduling rounds as device-parallel
+  jitted programs: one engine thread per cell, every ``fused``-backend
+  solve intercepted and batched across cells into ONE vmapped /
+  shard_mapped dispatch per (bucket, dtype, statics) group
+  (``repro.core.round.fused_round_batch``). Cells the batch program cannot
+  serve (forecast-driven policies, non-``fused`` solver backends) fall
+  back to the serial path, so any plan runs on any backend.
 
 Executors are themselves spec-addressable through the shared grammar —
 ``"sharded[shards=4,max_workers=4]"`` — with schemas introspected from the
@@ -24,9 +31,11 @@ from __future__ import annotations
 
 import concurrent.futures
 import os
+import threading
 from typing import Dict, List, Optional, Union
 
 import repro.obs as obs
+from repro.core import solvers
 from repro.experiments import runner
 from repro.experiments.plan import Cell
 from repro.spec import (Param, parse_raw, params_from_signature,
@@ -120,8 +129,178 @@ class ShardedExecutor(Executor):
         return [self._guarded(one, c) for c in cells]
 
 
+class _CellBatcher:
+    """Lockstep cross-cell solve batcher (the ``device`` backend's core).
+
+    Every participating cell runs in its own thread and funnels each
+    ``fused`` solve here via :func:`repro.core.solvers.intercepted`;
+    :meth:`submit` blocks until the whole wave's requests are flushed as
+    one device-parallel batch (``flush_fn``) and the caller's result is
+    back.
+
+    Liveness invariant: a flush fires exactly when every *active* thread
+    is blocked in :meth:`submit` — the last arrival executes the flush.
+    A thread that will submit nothing more MUST :meth:`finish` (the
+    executor does so in a ``finally``), which both removes it from the
+    barrier arithmetic and flushes any wave it was holding up. Cells make
+    different numbers of solves (different round counts, hard + soft
+    fallback rounds): late waves simply batch across whichever cells are
+    still running, down to single-request "batches" for the last cell
+    standing — identical results, less amortization.
+
+    A flush exception fans out to every waiting ``submit`` (re-raised in
+    each cell thread → that cell's error row); the batcher itself stays
+    usable for the survivors.
+    """
+
+    def __init__(self, flush_fn):
+        self._flush_fn = flush_fn
+        self._cv = threading.Condition()
+        self._active = 0
+        self._pending: List[list] = []      # [request, result, exception]
+
+    def register(self) -> None:
+        with self._cv:
+            self._active += 1
+
+    def finish(self) -> None:
+        with self._cv:
+            self._active -= 1
+            self._maybe_flush()
+
+    def submit(self, request):
+        item = [request, None, None]
+        with self._cv:
+            self._pending.append(item)
+            self._maybe_flush()
+            while item[1] is None and item[2] is None:
+                self._cv.wait()
+        if item[2] is not None:
+            raise item[2]
+        return item[1]
+
+    def _maybe_flush(self) -> None:
+        # Caller holds the lock. Every active thread pending -> flush now.
+        # (The non-submitting threads are all inside submit(), waiting, so
+        # holding the lock across the flush serializes nothing that could
+        # otherwise run.)
+        if not self._pending or len(self._pending) < self._active:
+            return
+        batch, self._pending = self._pending, []
+        try:
+            results = self._flush_fn([it[0] for it in batch])
+            for it, res in zip(batch, results):
+                it[1] = res
+        except BaseException as e:          # noqa: BLE001 — fan out to cells
+            for it in batch:
+                it[2] = e
+        self._cv.notify_all()
+
+
+class DeviceExecutor(Executor):
+    """Device-parallel cell execution: one engine thread per cell, the
+    cells' fused scheduling solves batched into ONE vmapped/shard_mapped
+    XLA dispatch per round wave (``repro.core.round.fused_round_batch``).
+
+    ``devices=0`` auto-sizes to every visible XLA device (configure the
+    host split with ``repro.launch.devices.set_host_platform_device_count``
+    *before* backend init); ``max_cells=0`` runs all batchable cells as one
+    wave, else waves of at most ``max_cells`` threads. Cells whose policy
+    cannot batch — forecast-driven pipelines (their fused path pre-solves
+    inside pricing) and non-``fused`` solver backends — run on the serial
+    path first; rows come back in plan order either way, bit-identical to
+    ``serial`` (pinned).
+    """
+
+    name = "device"
+
+    def __init__(self, devices: int = 0, max_cells: int = 0):
+        self.devices = int(devices)
+        self.max_cells = int(max_cells)
+
+    @staticmethod
+    def _batchable(cell: Cell) -> bool:
+        """True when the cell's every hard/soft solve goes through solver
+        backend ``"fused"`` — the one program the batch path serves.
+        Forecast-driven policies are excluded even with ``backend=fused``:
+        their fused path pre-solves inside pricing (``PricedPlan.presolved``)
+        and never reaches ``solvers.solve``, so a barrier slot for them
+        could deadlock the wave. Anything unclassifiable is non-batchable
+        (clean fallback beats a wrong classification)."""
+        from repro import policy
+        try:
+            spec = policy.as_spec(cell.policy)
+            entry = policy.get_policy(spec.name)
+            if entry.forecast_driven:
+                return False
+            backend = spec.params.get("backend")
+            if backend is None:
+                p = entry.params.get("backend")
+                backend = None if p is None else p.default
+            return backend == "fused"
+        except Exception:                   # noqa: BLE001 — conservative
+            return False
+
+    def _run_threaded(self, cell: Cell, i: int, rows: List,
+                      batcher: _CellBatcher) -> None:
+        from repro.core.round import SolveRequest
+
+        def hook(cost, allowed, capacity, *, backend, soften, overrun, tol,
+                 sigma):
+            if backend != "fused":
+                return None                 # decline: solve runs in-thread
+            return batcher.submit(SolveRequest(
+                cost=cost, allowed=allowed, capacity=capacity,
+                soften=soften, overrun=overrun, tol=tol, sigma=sigma))
+
+        try:
+            with solvers.intercepted(hook):
+                rows[i] = self._guarded(runner.run_cell, cell)
+        finally:
+            batcher.finish()
+
+    def run(self, cells: List[Cell]) -> List[Dict]:
+        import jax
+
+        from repro.core import round as fused_round
+
+        avail = len(jax.devices())
+        devices = self.devices or avail
+        if devices > avail:
+            obs.warn("executor.device_clamp",
+                     f"device executor asked for {devices} devices but only "
+                     f"{avail} XLA device(s) are visible — clamping (set "
+                     f"the host split via repro.launch.devices before "
+                     f"backend init)")
+            devices = avail
+        rows: List[Optional[Dict]] = [None] * len(cells)
+        batched = [i for i, c in enumerate(cells) if self._batchable(c)]
+        serial = [i for i in range(len(cells)) if i not in set(batched)]
+        for i in serial:
+            rows[i] = self._guarded(runner.run_cell, cells[i])
+        wave = self.max_cells or max(len(batched), 1)
+        for start in range(0, len(batched), wave):
+            chunk = batched[start:start + wave]
+            batcher = _CellBatcher(
+                lambda reqs: fused_round.fused_round_batch(
+                    reqs, devices=devices))
+            threads = []
+            for i in chunk:
+                batcher.register()
+                threads.append(threading.Thread(
+                    target=self._run_threaded, args=(cells[i], i, rows,
+                                                     batcher),
+                    name=f"device-cell-{i}", daemon=True))
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+        return rows
+
+
 _EXECUTORS = {cls.name: cls
-              for cls in (SerialExecutor, ProcessExecutor, ShardedExecutor)}
+              for cls in (SerialExecutor, ProcessExecutor, ShardedExecutor,
+                          DeviceExecutor)}
 
 ExecutorLike = Union[str, Executor]
 

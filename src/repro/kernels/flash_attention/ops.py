@@ -7,14 +7,8 @@ code path is correct (if not fast) everywhere.
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-
 from repro.kernels.flash_attention.flash_attention import flash_attention_bh
-
-
-def _on_tpu() -> bool:
-    return jax.devices()[0].platform == "tpu"
+from repro.runtime.platform import on_tpu as _on_tpu
 
 
 def flash_attention(q, k, v, *, causal=True, window=0, scale=None,

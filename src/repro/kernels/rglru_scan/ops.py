@@ -24,10 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.rglru_scan.rglru_scan import rglru_scan_pallas
-
-
-def _on_tpu() -> bool:
-    return jax.devices()[0].platform == "tpu"
+from repro.runtime.platform import on_tpu as _on_tpu
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))

@@ -1,13 +1,8 @@
 """Public wrapper for the fused Sinkhorn-iteration kernel."""
 from __future__ import annotations
 
-import jax
-
 from repro.kernels.sinkhorn.sinkhorn import sinkhorn_iteration_pallas
-
-
-def _on_tpu() -> bool:
-    return jax.devices()[0].platform == "tpu"
+from repro.runtime.platform import on_tpu as _on_tpu
 
 
 def sinkhorn_iteration(C, f, g, log_a, log_b, eps, *, bm=256,

@@ -1,13 +1,8 @@
 """Public wrapper for the SSD scan kernel (interpret fallback on CPU)."""
 from __future__ import annotations
 
-import jax
-
 from repro.kernels.ssd_scan.ssd_scan import ssd_scan_pallas
-
-
-def _on_tpu() -> bool:
-    return jax.devices()[0].platform == "tpu"
+from repro.runtime.platform import on_tpu as _on_tpu
 
 
 def ssd_scan(x, dt, A, Bm, Cm, *, chunk=256, interpret=None):

@@ -1,0 +1,99 @@
+"""Safe XLA host-platform device-count configuration.
+
+``--xla_force_host_platform_device_count=N`` splits the host CPU backend
+into N XLA devices — the standard way to develop/shard-test device-parallel
+programs on a CPU box (SNIPPETS #2/#3 idiom). Two sharp edges this module
+rounds off:
+
+* the flag only takes effect if it is in ``XLA_FLAGS`` *before* the JAX
+  backend initializes (first ``jax.devices()``/dispatch); set later it is a
+  silent no-op, and code that assumed N devices misbehaves at a distance;
+* naive ``os.environ["XLA_FLAGS"] = ...`` assignment clobbers every other
+  flag the user exported (the old ``launch.dryrun`` bug).
+
+:func:`set_host_platform_device_count` appends-and-replaces just this flag
+(pure-string merge, preserving unrelated flags), detects a live backend and
+— depending on ``strict`` — raises or warns instead of silently not working.
+Import order is deliberate: nothing here imports ``jax`` at module scope, so
+this module is safe to import before backend configuration.
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+from typing import Optional
+
+import repro.obs as obs
+
+__all__ = ["merge_xla_flag", "backend_initialized", "device_count",
+           "set_host_platform_device_count"]
+
+_FORCE_FLAG = "--xla_force_host_platform_device_count"
+
+
+def merge_xla_flag(flags: Optional[str], name: str, value) -> str:
+    """Pure string merge: replace any existing ``--name=...`` occurrence in
+    an ``XLA_FLAGS`` string with ``--name=value``, preserving every other
+    flag (and their order). ``flags=None`` means the variable was unset."""
+    token = f"{name}={value}"
+    parts = [p for p in (flags or "").split() if not
+             re.fullmatch(re.escape(name) + r"(=\S*)?", p)]
+    parts.append(token)
+    return " ".join(parts)
+
+
+def backend_initialized() -> bool:
+    """True when a JAX backend is already live in this process (at which
+    point platform flags can no longer take effect).
+
+    Cheap and import-safe: if ``jax`` was never imported the backend cannot
+    be initialized, so we do not import it just to ask. The live check goes
+    through the ``xla_bridge`` backend registry (private but stable across
+    the supported jax versions); if that moves, we conservatively report
+    ``True`` once jax is imported — callers then warn rather than silently
+    configure a dead flag.
+    """
+    if "jax" not in sys.modules:
+        return False
+    try:
+        from jax._src import xla_bridge
+        return bool(xla_bridge._backends)
+    except Exception:                       # pragma: no cover — jax internals
+        return True
+
+
+def device_count() -> int:
+    """``len(jax.devices())`` — initializes the backend (by design: callers
+    ask this only when they are done configuring)."""
+    import jax
+
+    return len(jax.devices())
+
+
+def set_host_platform_device_count(n: int, *, strict: bool = True) -> bool:
+    """Arrange for the host (CPU) platform to expose ``n`` XLA devices.
+
+    Must run before JAX backend init. Returns True when the flag is set (or
+    the backend is already live with exactly ``n`` devices). When the
+    backend is already initialized with a different count: raises
+    ``RuntimeError`` if ``strict``, else warns via ``obs.warn`` and returns
+    False — the caller keeps the real device view.
+    """
+    n = int(n)
+    if n < 1:
+        raise ValueError(f"device count must be >= 1, got {n}")
+    if backend_initialized():
+        live = device_count()
+        if live == n:
+            return True
+        msg = (f"JAX backend already initialized with {live} device(s); "
+               f"{_FORCE_FLAG}={n} can no longer take effect "
+               f"(set it before the first jax.devices()/dispatch)")
+        if strict:
+            raise RuntimeError(msg)
+        obs.warn("launch.xla_flags_late", msg)
+        return False
+    os.environ["XLA_FLAGS"] = merge_xla_flag(
+        os.environ.get("XLA_FLAGS"), _FORCE_FLAG, n)
+    return True

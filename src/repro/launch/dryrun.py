@@ -1,9 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-# The two lines above MUST precede every other import (jax locks the device
-# count at first init). Do not import this module from code that needs the
-# real single-device view.
-
 """Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
 
 For each cell this produces, without allocating a single model buffer:
@@ -23,10 +17,21 @@ Usage:
 """
 import argparse
 import json
+import os
 import re
 import time
 import traceback
 from typing import Dict, Optional
+
+# Forced 512-way host device split — MUST land in XLA_FLAGS before the jax
+# import below can initialize a backend (jax locks the device count at first
+# init). The merge helper preserves any flags the user already exported
+# (the old bare ``os.environ[...] =`` assignment clobbered them) and warns —
+# instead of silently no-op'ing — when some earlier import already brought
+# the backend up with the real single-device view.
+from repro.launch.devices import set_host_platform_device_count
+
+set_host_platform_device_count(512, strict=False)
 
 import jax
 import jax.numpy as jnp

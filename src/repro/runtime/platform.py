@@ -1,0 +1,36 @@
+"""ONE cached accelerator-platform probe.
+
+``jax.devices()[0].platform == "tpu"`` used to be copy-pasted across every
+kernel wrapper and the fused round. Each call is (a) a backend-init trigger
+— innocuous-looking module code could lock the device topology before
+``launch.devices`` had a chance to configure it — and (b) a per-call device
+query on hot paths. The probe below initializes the backend exactly once,
+on first *use* (never at import), and caches the answer for the life of the
+process; everything platform-conditional goes through it.
+
+The cache is correct because a JAX process cannot change platform after
+backend init — the first ``jax.devices()`` call pins it. Tests that fake a
+platform can ``platform.cache_clear()``.
+"""
+from __future__ import annotations
+
+import functools
+
+__all__ = ["platform", "on_tpu"]
+
+
+@functools.lru_cache(maxsize=None)
+def platform() -> str:
+    """The default JAX backend's platform name ("cpu" / "gpu" / "tpu").
+
+    First call initializes the JAX backend (by design: callers are already
+    about to dispatch); later calls are a dict lookup.
+    """
+    import jax
+
+    return jax.devices()[0].platform
+
+
+def on_tpu() -> bool:
+    """True when the default backend is a real TPU (the Pallas fast path)."""
+    return platform() == "tpu"

@@ -139,7 +139,7 @@ def test_executor_specs_share_the_grammar():
     with pytest.raises(UnknownParamError, match="shards"):
         experiments.get_executor("sharded[shard=2]")
     assert set(experiments.list_executors()) == \
-        {"serial", "process", "sharded"}
+        {"serial", "process", "sharded", "device"}
 
 
 # ---------------------------------------------------------------------------

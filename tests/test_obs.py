@@ -196,11 +196,18 @@ def test_capture_restores_and_folds():
 def test_bucket_overflow_warn_counter():
     from repro.core.solvers import jax_solver
     obs.reset()
+    rows = jax_solver.BUCKETS[-1] + 1
+    # The overflow warning fires once per ad-hoc size; re-arm in case an
+    # earlier test already overflowed into the same bucket.
+    jax_solver._OVERFLOW_WARNED.discard(2 * jax_solver.BUCKETS[-1])
     before = obs.counter_value("warn/solver.bucket_overflow")
     with pytest.warns(RuntimeWarning, match="padded bucket"):
         warnings.simplefilter("always")
-        b = jax_solver.bucket_for(jax_solver.BUCKETS[-1] + 1)
-    assert b >= jax_solver.BUCKETS[-1] + 1
+        b = jax_solver.bucket_for(rows)
+    assert b >= rows
+    assert obs.counter_value("warn/solver.bucket_overflow") == before + 1
+    # ...and is deduplicated on repeat overflows of that size.
+    jax_solver.bucket_for(rows)
     assert obs.counter_value("warn/solver.bucket_overflow") == before + 1
 
 
